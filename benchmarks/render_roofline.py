@@ -1,0 +1,130 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(x):
+    return f"{x*1e3:.1f}" if x < 10 else f"{x*1e3:.0f}"
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _refresh_roofline(rec):
+    """Recompute derived roofline fields from the stored raw terms using the
+    current model-flops accounting (PaLM-style incl. attention)."""
+    from repro.configs import get_arch, SHAPES
+    from repro.launch import roofline as RL
+    r = rec["roofline"]
+    rep = RL.RooflineReport(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=rec["chips"], flops_per_chip=r["flops_per_chip"],
+        bytes_per_chip=r["bytes_per_chip"],
+        coll_bytes_per_chip=r["coll_bytes_per_chip"],
+        coll_breakdown=r.get("coll_breakdown", {}),
+        peak_memory_per_chip=r.get("peak_memory_per_chip", 0.0),
+        model_flops=RL.model_flops_for(get_arch(rec["arch"]),
+                                       SHAPES[rec["shape"]]))
+    rec["roofline"] = rep.to_dict()
+    return rec
+
+
+def render(recs, mesh="pod16x16"):
+    rows = []
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+          "| bottleneck | HLO GFLOPs/chip | peak mem/chip | useful-flops | "
+          "roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for rec in recs:
+        if rec.get("mesh") != mesh:
+            continue
+        a, s = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            print(f"| {a} | {s} | skip | — | — | — | — | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            print(f"| {a} | {s} | FAIL | — | — | — | — | — | — | — |")
+            continue
+        rec = _refresh_roofline(rec)
+        r = rec["roofline"]
+        mem = rec.get("memory", {})
+        peak = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0))
+        print(f"| {a} | {s} | ok | {fmt_t(r['t_compute'])} | "
+              f"{fmt_t(r['t_memory'])} | {fmt_t(r['t_collective'])} | "
+              f"{r['bottleneck']} | {r['flops_per_chip']/1e9:.0f} | "
+              f"{peak/2**30:.1f} GiB | {r['useful_flops_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.1%} |")
+
+
+def note_for(rec) -> str:
+    """One sentence: what would move the dominant term down."""
+    r = rec["roofline"]
+    b, shape, arch = r["bottleneck"], rec["shape"], rec["arch"]
+    coll = r.get("coll_breakdown", {})
+    top_coll = max(coll, key=coll.get) if any(coll.values()) else ""
+    decode = "decode" in shape or "long" in shape
+    if b == "collective":
+        if "moe" in arch or "jamba" in arch:
+            return (f"dominant {top_coll}: MoE dispatch + TP activation "
+                    "re-sharding; overlap via latency-hiding scheduler and "
+                    "wider expert-parallel groups would hide most of it")
+        return (f"dominant {top_coll}: per-layer TP/SP activation "
+                "re-sharding; for sub-1B models map batch over the model "
+                "axis too (pure DP, see §Perf cell 1)")
+    if b == "memory":
+        if decode:
+            return ("KV-cache/state streaming is irreducible at batch "
+                    f"{rec.get('shape')}: raise arithmetic intensity via "
+                    "grouped/speculative decode or int8/fp8 cache")
+        return ("activation traffic between contraction boundaries; a "
+                "fused (Pallas) attention/FFN pipeline or bf16 logits "
+                "would cut the largest dot operands")
+    return ("compute-bound: increase per-chip work (bigger microbatch) or "
+            "accept — this is the roofline target")
+
+
+def render_notes(recs, mesh="pod16x16"):
+    print(f"\n### Per-cell notes ({mesh})\n")
+    for rec in recs:
+        if rec.get("mesh") != mesh or rec.get("status") != "ok":
+            continue
+        rec = _refresh_roofline(rec)
+        print(f"* **{rec['arch']} × {rec['shape']}** "
+              f"({rec['roofline']['bottleneck']}-bound): {note_for(rec)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    meshes = [args.mesh] if args.mesh else ["pod16x16", "pod2x16x16"]
+    for m in meshes:
+        render(recs, m)
+    if args.notes:
+        render_notes(recs, "pod16x16")
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_fail = len(recs) - n_ok - n_skip
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_fail} failed "
+          f"of {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Compiler-in-the-loop demo: the deployed cost model drives fusion,
+unroll, and recompile decisions (the paper's §1 motivation).
+
+    PYTHONPATH=src python examples/compiler_advisors.py
+"""
+import subprocess
+import sys
+
+# The serve driver is the real implementation; this example runs a short
+# end-to-end session through it.
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--requests", "300", "--train-steps", "300", "--n-graphs", "900"]))

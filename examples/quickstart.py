@@ -1,0 +1,37 @@
+"""Quickstart: build an MLIR corpus, train the paper's Conv1D cost model,
+predict hardware characteristics for an unseen graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.costmodel import CostModelConfig
+from repro.core import trainer as TR
+from repro.core.service import CostModelService
+from repro.ir import dataset as DS, printer, samplers, analyzers
+
+cfg = CostModelConfig(name="quickstart", vocab_size=2048, max_seq=128,
+                      embed_dim=64, conv_channels=(64,) * 6,
+                      fc_dims=(256, 64))
+
+print("1) sampling 1200 dataflow graphs (resnet/bert/unet/ssd/yolo) ...")
+ds = DS.build_dataset(1200, mode="ops", max_seq=128, vocab_size=2048,
+                      augment_factor=2, seed=0)
+train, test = ds.split(0.1)
+
+print("2) training the Conv1D+MaxPool+FC regressor on register pressure ...")
+res = TR.train_model("conv1d", cfg, train, "register_pressure",
+                     steps=500, batch_size=128, lr=2e-3, verbose=True,
+                     log_every=100)
+metrics = TR.evaluate("conv1d", cfg, res, test, "register_pressure")
+print("   test metrics:", {k: round(v, 2) for k, v in metrics.items()})
+
+print("3) predicting an unseen graph ...")
+rng = np.random.default_rng(123)
+g = samplers.sample_graph(rng, "bert")
+print(printer.to_mlir(g).splitlines()[0], "...")
+svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
+                       res.norm_stats, mode="ops", max_seq=128)
+pred = svc.predict(g)
+true = analyzers.register_pressure(g)
+print(f"   predicted register pressure: {pred:.1f}  (ground truth: {true})")

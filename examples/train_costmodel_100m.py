@@ -1,0 +1,22 @@
+"""End-to-end driver: train the ~100M-parameter cost model for a few
+hundred steps with the full production substrate (sharded data pipeline,
+AdamW, int8 error-feedback grad compression, atomic checkpoints + resume).
+
+    # demo scale (runs in minutes on CPU):
+    PYTHONPATH=src python examples/train_costmodel_100m.py --steps 300
+
+    # the actual 100M config (use on real hardware):
+    PYTHONPATH=src python examples/train_costmodel_100m.py \
+        --preset 100m --steps 200
+"""
+import sys
+import subprocess
+
+args = sys.argv[1:]
+if not any(a.startswith("--preset") for a in args):
+    args = ["--preset", "base"] + args
+if not any(a.startswith("--steps") for a in args):
+    args += ["--steps", "300"]
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.train", "--compress-grads",
+     "--target", "register_pressure"] + args))

@@ -1,0 +1,110 @@
+"""Perf hillclimb driver: run named variants of the three chosen cells and
+record roofline terms per iteration (EXPERIMENTS.md §Perf reads these).
+
+    PYTHONPATH=src python experiments/hillclimb.py --cell llava_prefill
+    PYTHONPATH=src python experiments/hillclimb.py --all
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun as DR
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb")
+
+# Each variant: (tag, kwargs for run_cell). Baselines ran with the v0 code;
+# the "it1-*" rows re-measure after global code changes (context parallelism
+# + SP residual sharding), later rows apply per-cell overrides.
+CELLS = {
+    "llava_prefill": [
+        ("it1-context-parallel", dict(
+            arch_name="llava-next-34b", shape_name="prefill_32k")),
+        ("it2-noSP-residual", dict(
+            arch_name="llava-next-34b", shape_name="prefill_32k",
+            rules_overrides={"embed": None, "qseq": ("model",)})),
+        ("it3-pad-heads-tp", dict(
+            arch_name="llava-next-34b", shape_name="prefill_32k",
+            pad_heads=True)),
+        ("it4-pad-heads-batch2d", dict(
+            arch_name="llava-next-34b", shape_name="prefill_32k",
+            pad_heads=True,
+            rules_overrides={"batch": ("data",), "qseq": ()})),
+    ],
+    "jamba_train": [
+        ("it1-global-sp", dict(
+            arch_name="jamba-v0.1-52b", shape_name="train_4k")),
+        ("it2-seq-sharded-residual", dict(
+            arch_name="jamba-v0.1-52b", shape_name="train_4k",
+            rules_overrides={"seq": ("model",)})),
+        ("it3-batch-over-model-too", dict(
+            arch_name="jamba-v0.1-52b", shape_name="train_4k",
+            rules_overrides={"batch": ("pod", "data", "model")})),
+        ("it4-2d-param-sharding", dict(
+            arch_name="jamba-v0.1-52b", shape_name="train_4k")),
+        ("it5-2d-params-dp-batch", dict(
+            arch_name="jamba-v0.1-52b", shape_name="train_4k",
+            rules_overrides={"batch": ("pod", "data", "model")})),
+    ],
+    "qwen3_train": [
+        ("it1-global-sp", dict(
+            arch_name="qwen3-0.6b", shape_name="train_4k")),
+        ("it2-pure-dp", dict(
+            arch_name="qwen3-0.6b", shape_name="train_4k",
+            rules_overrides={"batch": ("pod", "data", "model")})),
+        ("it3-pure-dp-no-remat", dict(
+            arch_name="qwen3-0.6b", shape_name="train_4k", remat=False,
+            rules_overrides={"batch": ("pod", "data", "model")})),
+        ("it4-dp-replicated-params", dict(
+            arch_name="qwen3-0.6b", shape_name="train_4k", remat=False,
+            rules_overrides={"batch": ("pod", "data", "model"),
+                             "ffn": None, "vocab": None, "heads": None,
+                             "kv_heads": None})),
+        ("it5-dp-repl-bf16-grads", dict(
+            arch_name="qwen3-0.6b", shape_name="train_4k", remat=False,
+            grad_bf16=True,
+            rules_overrides={"batch": ("pod", "data", "model"),
+                             "ffn": None, "vocab": None, "heads": None,
+                             "kv_heads": None})),
+    ],
+}
+
+
+def run(cell):
+    os.makedirs(OUT, exist_ok=True)
+    for tag, kw in CELLS[cell]:
+        path = os.path.join(OUT, f"{cell}__{tag}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") == "ok":
+                r = rec["roofline"]
+                print(f"[cached] {cell}/{tag}: "
+                      f"t=({r['t_compute']*1e3:.0f},{r['t_memory']*1e3:.0f},"
+                      f"{r['t_collective']*1e3:.0f})ms "
+                      f"frac={r['roofline_fraction']:.2%}")
+                continue
+        print(f"=== {cell} / {tag} ===")
+        try:
+            rec = DR.run_cell(verbose=True, **kw)
+        except Exception as e:
+            import traceback
+            rec = {"status": "failed", "error": str(e),
+                   "traceback": traceback.format_exc()[-1500:]}
+            print(f"FAILED: {str(e)[:300]}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(CELLS), default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    for c in ([args.cell] if args.cell else sorted(CELLS)):
+        if c:
+            run(c)

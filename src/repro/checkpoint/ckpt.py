@@ -1,0 +1,128 @@
+"""Sharded, atomic, elastic checkpointing (no orbax/tensorstore available).
+
+Layout::
+
+    <dir>/step_000123/
+        manifest.json          # tree structure, shapes, dtypes, shard map,
+                               # integrity hashes, loader cursor, mesh shape
+        leaf_00000.npy ...     # one file per pytree leaf (np arrays)
+        _COMMITTED             # written last: atomic-commit marker
+
+Fault-tolerance contract:
+* save is atomic — a crash mid-save leaves no _COMMITTED marker and the
+  restore path ignores the partial directory;
+* restore picks the newest committed step <= requested;
+* elastic re-shard: arrays are stored unsharded (gathered views); on load
+  they are device_put against the *current* mesh's shardings, so a job can
+  restart on a different mesh/pod count without conversion.
+
+For true at-scale use each host writes only the shards it owns; here the
+single-process layout keeps the same manifest contract.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+COMMIT_MARKER = "_COMMITTED"
+
+
+def _tree_paths(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(directory: str, step: int, tree, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomic checkpoint save. Returns the committed path."""
+    final = os.path.join(directory, f"step_{step:09d}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=directory)
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef),
+                "extra": extra or {}, "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha1": hashlib.sha1(arr.tobytes()).hexdigest()})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(latest_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+def latest_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(directory, name, COMMIT_MARKER)):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def restore(directory: str, like, *, step: Optional[int] = None,
+            shardings=None, verify: bool = False
+            ) -> Tuple[Any, int, Dict]:
+    """Restore newest committed checkpoint into the structure of ``like``.
+
+    shardings: optional pytree of NamedShardings (same structure) — enables
+    elastic re-shard onto the current mesh."""
+    steps = latest_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s <= step]
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    chosen = steps[-1]
+    path = os.path.join(directory, f"step_{chosen:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree.flatten(like)
+    assert len(leaves_like) == manifest["n_leaves"], \
+        f"checkpoint has {manifest['n_leaves']} leaves, model expects " \
+        f"{len(leaves_like)}"
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
+        else [None] * len(leaves_like)
+    out = []
+    for i, (meta, ref, shd) in enumerate(
+            zip(manifest["leaves"], leaves_like, shard_leaves)):
+        arr = np.load(os.path.join(path, meta["file"]))
+        if verify:
+            assert hashlib.sha1(arr.tobytes()).hexdigest() == meta["sha1"], \
+                f"integrity failure on leaf {i}"
+        assert tuple(arr.shape) == tuple(ref.shape), \
+            f"leaf {i}: ckpt {arr.shape} vs model {ref.shape}"
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree.unflatten(treedef, out), chosen, manifest["extra"]

@@ -1,0 +1,226 @@
+"""The paper's three regressor families, in pure JAX.
+
+1. FC bag-of-tokens        — mean-pooled embeddings -> FC stack (worst RMSE).
+2. LSTM                    — lax.scan LSTM over the sequence (middle).
+3. Conv1D+MaxPool+FC       — 6 stacked Conv1D (filter sizes per config),
+                             MaxPool1D, 3 FC layers (best RMSE; Figs 5/6).
+
+All models share the embedding layer (dim 64 per the paper) and emit a
+scalar regression target. Params are plain dicts with matching ``*_axes``
+for the sharded 100M-scale driver.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init
+
+
+# --------------------------------------------------------------- embedding
+def embed_init(key, cfg):
+    return {"emb": _init(key, (cfg.vocab_size, cfg.embed_dim), scale=0.02)}
+
+
+def _mask(ids):
+    return (ids != 0).astype(jnp.float32)  # PAD id is 0
+
+
+# --------------------------------------------------------------- FC (BoT)
+def fc_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    p = {**embed_init(ks[0], cfg)}
+    dims = [cfg.embed_dim, *cfg.fc_dims, 1]
+    p["fc"] = [{"w": _init(ks[1 + i % 3], (dims[i], dims[i + 1])),
+                "b": jnp.zeros((dims[i + 1],))}
+               for i in range(len(dims) - 1)]
+    return p
+
+
+def fc_axes(cfg):
+    return {"emb": ("vocab", "embed"),
+            "fc": [{"w": ("ffn", None) if i else ("embed", "ffn"),
+                    "b": (None,)} for i in range(len(cfg.fc_dims) + 1)]}
+
+
+def fc_apply(p, ids):
+    m = _mask(ids)
+    x = p["emb"][ids] * m[..., None]
+    x = x.sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)  # bag of tokens
+    for i, layer in enumerate(p["fc"]):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(p["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return x[..., 0]
+
+
+# --------------------------------------------------------------- LSTM
+def lstm_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    h = cfg.lstm_hidden
+    return {**embed_init(ks[0], cfg),
+            "wx": _init(ks[1], (cfg.embed_dim, 4 * h)),
+            "wh": _init(ks[2], (h, 4 * h)),
+            "b": jnp.zeros((4 * h,)),
+            "head": {"w": _init(ks[3], (h, 1)), "b": jnp.zeros((1,))}}
+
+
+def lstm_axes(cfg):
+    return {"emb": ("vocab", "embed"), "wx": ("embed", "ffn"),
+            "wh": (None, "ffn"), "b": (None,),
+            "head": {"w": (None, None), "b": (None,)}}
+
+
+def lstm_apply(p, ids):
+    x = p["emb"][ids]                       # (B, S, E)
+    m = _mask(ids)
+    B = x.shape[0]
+    h_dim = p["wh"].shape[0]
+    xw = x @ p["wx"] + p["b"]
+
+    def step(carry, inp):
+        h, c = carry
+        xt, mt = inp
+        gates = xt + h @ p["wh"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0), jax.nn.sigmoid(o)
+        g = jnp.tanh(g)
+        c_new = f * c + i * g
+        h_new = o * jnp.tanh(c_new)
+        keep = mt[:, None]
+        return (h_new * keep + h * (1 - keep),
+                c_new * keep + c * (1 - keep)), None
+
+    h0 = jnp.zeros((B, h_dim))
+    (h, _), _ = jax.lax.scan(step, (h0, h0),
+                             (xw.transpose(1, 0, 2), m.T))
+    return (h @ p["head"]["w"] + p["head"]["b"])[..., 0]
+
+
+# ------------------------------------------------- Conv1D + MaxPool + FC
+def conv_init(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2 + cfg.n_conv + 3)
+    p = {**embed_init(ks[0], cfg), "convs": []}
+    c_in = cfg.embed_dim
+    for i, (fs, c_out) in enumerate(zip(cfg.conv_filters, cfg.conv_channels)):
+        p["convs"].append({
+            "w": _init(ks[1 + i], (fs, c_in, c_out),
+                       scale=1.0 / np.sqrt(fs * c_in)),
+            "b": jnp.zeros((c_out,))})
+        c_in = c_out
+    dims = [c_in, *cfg.fc_dims, 1]
+    p["fc"] = [{"w": _init(ks[1 + cfg.n_conv + i], (dims[i], dims[i + 1])),
+                "b": jnp.zeros((dims[i + 1],))}
+               for i in range(len(dims) - 1)]
+    return p
+
+
+def conv_axes(cfg):
+    return {"emb": ("vocab", "embed"),
+            "convs": [{"w": (None, None, "ffn"), "b": ("ffn",)}
+                      for _ in range(cfg.n_conv)],
+            "fc": [{"w": ("ffn", None), "b": (None,)}
+                   for _ in range(len(cfg.fc_dims) + 1)]}
+
+
+def conv1d(x, w, b):
+    """'same'-padded 1D conv. x: (B, S, Cin); w: (fs, Cin, Cout)."""
+    fs = w.shape[0]
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,),
+        padding=[((fs - 1) // 2, fs // 2)],
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b
+
+
+def conv_apply(p, ids, *, pooled_feats: bool = False):
+    x = p["emb"][ids] * _mask(ids)[..., None]   # (B, S, E)
+    for layer in p["convs"]:
+        x = jax.nn.relu(conv1d(x, layer["w"], layer["b"]))
+    x = x.max(axis=1)                            # MaxPool1D over sequence
+    feats = x
+    for i, layer in enumerate(p["fc"]):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(p["fc"]) - 1:
+            x = jax.nn.relu(x)
+    return (x[..., 0], feats) if pooled_feats else x[..., 0]
+
+
+# ------------------------------------------------- Transformer (beyond-paper)
+# The paper's §6 future work #1: "Use more powerful models like
+# Transformers to better the currently achieved accuracy figures".
+def xformer_init(key, cfg, n_layers=2, n_heads=4) -> Dict[str, Any]:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 2 + 5 * n_layers)
+    p = {**embed_init(ks[0], cfg),
+         "pos": _init(ks[1], (cfg.max_seq, d), scale=0.02),
+         "blocks": []}
+    for i in range(n_layers):
+        o = 2 + 5 * i
+        p["blocks"].append({
+            "wqkv": _init(ks[o], (d, 3 * d)),
+            "wo": _init(ks[o + 1], (d, d)),
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "w1": _init(ks[o + 2], (d, 4 * d)),
+            "w2": _init(ks[o + 3], (4 * d, d)),
+        })
+    p["head"] = {"w": _init(ks[-1], (d, 1)), "b": jnp.zeros((1,))}
+    return p
+
+
+def xformer_axes(cfg):
+    blk = {"wqkv": ("embed", "ffn"), "wo": (None, "embed"),
+           "ln1": (None,), "ln2": (None,),
+           "w1": ("embed", "ffn"), "w2": ("ffn", "embed")}
+    return {"emb": ("vocab", "embed"), "pos": (None, "embed"),
+            "blocks": [blk, blk],
+            "head": {"w": (None, None), "b": (None,)}}
+
+
+def _ln(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def xformer_apply(p, ids):
+    m = _mask(ids)
+    B, S = ids.shape
+    d = p["emb"].shape[1]
+    h = p["emb"][ids] + p["pos"][:S]
+    H = 4  # fixed head count for the cost-model transformer
+    dh = d // H
+    neg = (1.0 - m)[:, None, None, :] * -1e30  # mask padded keys
+    for blk in p["blocks"]:
+        x = _ln(h, blk["ln1"])
+        qkv = x @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+        a = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(dh) + neg
+        w = jax.nn.softmax(a, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w, v).transpose(0, 2, 1, 3)
+        h = h + o.reshape(B, S, d) @ blk["wo"]
+        x = _ln(h, blk["ln2"])
+        h = h + jax.nn.gelu(x @ blk["w1"]) @ blk["w2"]
+    pooled = (h * m[..., None]).sum(1) / jnp.maximum(
+        m.sum(1, keepdims=True), 1.0)
+    return (pooled @ p["head"]["w"] + p["head"]["b"])[..., 0]
+
+
+MODELS = {
+    "fc": (fc_init, fc_apply, fc_axes),
+    "lstm": (lstm_init, lstm_apply, lstm_axes),
+    "conv1d": (conv_init, conv_apply, conv_axes),
+    "xformer": (xformer_init, xformer_apply, xformer_axes),
+}
+
+
+def get_model(kind: str):
+    if kind not in MODELS:
+        raise KeyError(f"unknown model {kind!r}; one of {sorted(MODELS)}")
+    return MODELS[kind]

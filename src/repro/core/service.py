@@ -1,0 +1,179 @@
+"""CostModelService — the deployed model, as the DL-compiler sees it.
+
+The paper's end state: "Deploy the model which the DL-compiler can invoke
+while compiling in order to make the best decisions." This module provides:
+
+* batched, cached inference over MLIR graphs/text;
+* three compiler advisors built on top of it:
+  - FusionAdvisor:    fuse A->B if predicted cost(fused) < cost(A)+cost(B)
+  - UnrollAdvisor:    pick unroll factor in {1,2,4,8} minimizing predicted
+                      latency while register pressure stays under budget
+  - RecompileAdvisor: given new tensor shapes, reuse compiled code if the
+                      predicted characteristic shift is below a threshold
+                      (the paper's dynamic-runtime recompile decision).
+"""
+from __future__ import annotations
+
+import copy
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as CM
+from repro.core import tokenizer as TOK
+from repro.ir import dataset as DS
+from repro.ir.graph import Graph, Tensor
+
+
+@dataclass
+class CostModelService:
+    kind: str
+    cfg: object
+    params: object
+    vocab: TOK.Vocab
+    norm_stats: Dict[str, float]
+    mode: str = "ops"
+    max_seq: int = 256
+    max_batch: int = 256
+    _cache: Dict[str, float] = field(default_factory=dict)
+    _apply = None
+
+    def __post_init__(self):
+        _, apply_fn, _ = CM.get_model(self.kind)
+        self._apply = jax.jit(apply_fn)
+
+    # ------------------------------------------------------------- inference
+    def _encode(self, g: Graph) -> np.ndarray:
+        return self.vocab.encode(TOK.graph_tokens(g, self.mode), self.max_seq)
+
+    def predict_graphs(self, graphs: Sequence[Graph]) -> np.ndarray:
+        """Batched prediction with content-hash caching."""
+        keys, missing, enc = [], [], []
+        for g in graphs:
+            ids = self._encode(g)
+            h = hashlib.sha1(ids.tobytes()).hexdigest()
+            keys.append(h)
+            if h not in self._cache:
+                missing.append(h)
+                enc.append(ids)
+        if enc:
+            ids = np.stack(enc)
+            preds = []
+            for i in range(0, len(ids), self.max_batch):
+                preds.append(np.asarray(
+                    self._apply(self.params, jnp.asarray(ids[i:i + self.max_batch]))))
+            for h, p in zip(missing, np.concatenate(preds)):
+                self._cache[h] = float(p)
+        raw = np.array([self._cache[k] for k in keys])
+        return DS.denormalize(raw, self.norm_stats)
+
+    def predict(self, g: Graph) -> float:
+        return float(self.predict_graphs([g])[0])
+
+
+# --------------------------------------------------------------- advisors
+def fuse_elementwise(g: Graph) -> Graph:
+    """Fuse producer->consumer elementwise chains into single 'xpu.fused'
+    ops (a graph-level operator-fusion transform)."""
+    from repro.ir.graph import ELEMENTWISE
+    new = Graph(name=g.name + "_fused")
+    new.values = list(g.values[:g.n_args])
+    new.n_args = g.n_args
+    id_map = {i: i for i in range(g.n_args)}
+    uses: Dict[int, int] = {}
+    for op in g.ops:
+        for o in op.operands:
+            uses[o] = uses.get(o, 0) + 1
+    producer = {op.result: op for op in g.ops}
+    fused_into: Dict[int, int] = {}
+    for op in g.ops:
+        if (op.opcode in ELEMENTWISE and len(op.operands) == 1
+                and op.operands[0] in producer
+                and producer[op.operands[0]].opcode in ELEMENTWISE
+                and uses.get(op.operands[0], 0) == 1
+                and op.operands[0] in fused_into):
+            # extend the producer's fusion group
+            fused_into[op.result] = fused_into[op.operands[0]]
+            id_map[op.result] = id_map[op.operands[0]]
+            new.values[id_map[op.result]] = g.values[op.result]
+            continue
+        nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
+                         g.values[op.result], **op.attrs)
+        id_map[op.result] = nid
+        if op.opcode in ELEMENTWISE:
+            fused_into[op.result] = nid
+    new.outputs = [id_map[o] for o in g.outputs]
+    new.validate()
+    return new
+
+
+@dataclass
+class FusionAdvisor:
+    service: CostModelService
+
+    def advise(self, g: Graph) -> Tuple[bool, float, float]:
+        fused = fuse_elementwise(g)
+        c0, c1 = self.service.predict_graphs([g, fused])
+        return bool(c1 < c0), float(c0), float(c1)
+
+
+def unroll_graph(g: Graph, factor: int) -> Graph:
+    """Model loop unrolling of the graph body: replicate ops with renamed
+    SSA ids (shared args), as an unrolled inner loop would look to the
+    cost model."""
+    new = Graph(name=f"{g.name}_u{factor}")
+    new.values = list(g.values[:g.n_args])
+    new.n_args = g.n_args
+    outs = []
+    for rep in range(factor):
+        id_map = {i: i for i in range(g.n_args)}
+        for op in g.ops:
+            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
+                             g.values[op.result], **op.attrs)
+            id_map[op.result] = nid
+        outs.extend(id_map[o] for o in g.outputs)
+    new.outputs = outs
+    new.validate()
+    return new
+
+
+@dataclass
+class UnrollAdvisor:
+    latency_service: CostModelService
+    regpressure_service: CostModelService
+    register_budget: float = 64.0
+
+    def advise(self, g: Graph, factors=(1, 2, 4, 8)) -> Dict:
+        cands = {f: unroll_graph(g, f) for f in factors}
+        lat = self.latency_service.predict_graphs(list(cands.values()))
+        reg = self.regpressure_service.predict_graphs(list(cands.values()))
+        per_iter = {f: lat[i] / f for i, f in enumerate(cands)}
+        feasible = [f for i, f in enumerate(cands)
+                    if reg[i] <= self.register_budget]
+        best = min(feasible or [1], key=lambda f: per_iter[f])
+        return {"best_factor": int(best),
+                "per_iter_latency": {f: float(v) for f, v in per_iter.items()},
+                "register_pressure": {f: float(reg[i])
+                                      for i, f in enumerate(cands)}}
+
+
+@dataclass
+class RecompileAdvisor:
+    """Dynamic-runtime decision: with operator shapes changed at runtime,
+    is the already-compiled code still good enough, or is recompilation
+    (expensive) worth it?"""
+    service: CostModelService
+    threshold: float = 0.15   # recompile if predicted cost shifts > 15%
+
+    def advise(self, compiled_graph: Graph, new_graph: Graph) -> Dict:
+        c_old, c_new = self.service.predict_graphs(
+            [compiled_graph, new_graph])
+        shift = abs(c_new - c_old) / max(abs(c_old), 1e-9)
+        return {"recompile": bool(shift > self.threshold),
+                "predicted_old": float(c_old),
+                "predicted_new": float(c_new),
+                "shift": float(shift)}

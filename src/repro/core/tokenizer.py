@@ -1,0 +1,121 @@
+"""MLIR tokenization — the paper's two schemes (Fig. 4).
+
+* ``ops``           — opcode sequence + graph input/output tensor shapes;
+                      operands dropped; each full shape is ONE token
+                      (e.g. ``8x224x224x3xf32``).
+* ``ops_operands``  — opcodes AND SSA operand names (``%3``, ``%arg1``) and
+                      per-op output shape, in source order (~4x longer).
+
+Unseen shape tokens or ``%k`` names become ``<unk>`` (the paper's OOV
+failure mode, reproduced faithfully).
+
+The tokenizer also accepts raw MLIR *text* (e.g. StableHLO emitted by
+``jax.jit(...).lower().as_text()``) via :func:`tokenize_text` — a
+whitespace/punctuation lexer that keeps opcodes, SSA names, and
+``NxMxf32`` shapes as single tokens.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.ir.graph import Graph
+
+PAD, UNK, BOS, EOS, SEP = "<pad>", "<unk>", "<bos>", "<eos>", "<sep>"
+SPECIALS = [PAD, UNK, BOS, EOS, SEP]
+
+_SHAPE_RE = re.compile(r"^\d+(x\d+)*x?(f32|bf16|f16|i8|i32)$")
+_TEXT_TOKEN_RE = re.compile(
+    r"%[A-Za-z0-9_]+|\"[a-z_]+\.[a-z0-9_.]+\"|[a-z_]+\.[a-z0-9_.]+"
+    r"|tensor<[^>]*>|\d+x[0-9x]*(?:f32|bf16|f16|i8|i32)|[A-Za-z_][A-Za-z0-9_]*")
+
+
+def graph_tokens(g: Graph, mode: str = "ops") -> List[str]:
+    """Token sequence for a Graph, per the paper's Fig. 4 layout."""
+    toks = [BOS]
+    # (2) input tensor shapes, each shape a single token
+    for i in range(g.n_args):
+        toks.append(g.values[i].shape_token())
+    toks.append(SEP)
+    if mode == "ops":
+        # (1) the xpu.op sequence with per-op output shape; operand names
+        # (and hence data dependence) dropped — paper's first scheme
+        for op in g.ops:
+            toks.append(f"xpu.{op.opcode}")
+            toks.append(g.values[op.result].shape_token())
+    elif mode == "ops_operands":
+        for op in g.ops:
+            toks.append(g.ssa_name(op.result))
+            toks.append(f"xpu.{op.opcode}")
+            toks.extend(g.ssa_name(o) for o in op.operands)
+            toks.append(g.values[op.result].shape_token())
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    toks.append(SEP)
+    # (3) output tensor shapes
+    for o in g.outputs:
+        toks.append(g.values[o].shape_token())
+    toks.append(EOS)
+    return toks
+
+
+def tokenize_text(mlir_text: str) -> List[str]:
+    """Lex raw MLIR text (StableHLO/affine dialects) into tokens; tensor
+    types collapse to single shape tokens per the paper's policy."""
+    toks = [BOS]
+    for m in _TEXT_TOKEN_RE.finditer(mlir_text):
+        t = m.group(0)
+        if t.startswith("tensor<"):
+            t = t[len("tensor<"):-1].replace("?", "D")
+        toks.append(t.strip('"'))
+    toks.append(EOS)
+    return toks
+
+
+@dataclass
+class Vocab:
+    token_to_id: Dict[str, int]
+
+    @property
+    def size(self) -> int:
+        return len(self.token_to_id)
+
+    def encode(self, tokens: Sequence[str], max_len: int) -> np.ndarray:
+        unk = self.token_to_id[UNK]
+        ids = [self.token_to_id.get(t, unk) for t in tokens[:max_len]]
+        out = np.full((max_len,), self.token_to_id[PAD], np.int32)
+        out[:len(ids)] = ids
+        return out
+
+    def oov_rate(self, tokens: Sequence[str]) -> float:
+        if not tokens:
+            return 0.0
+        return sum(t not in self.token_to_id for t in tokens) / len(tokens)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.token_to_id, f)
+
+    @classmethod
+    def load(cls, path: str) -> "Vocab":
+        with open(path) as f:
+            return cls(json.load(f))
+
+
+def fit_vocab(token_seqs: Iterable[Sequence[str]],
+              max_size: int = 8192, min_count: int = 1) -> Vocab:
+    counts: Counter = Counter()
+    for seq in token_seqs:
+        counts.update(seq)
+    vocab = {t: i for i, t in enumerate(SPECIALS)}
+    for tok, c in counts.most_common():
+        if len(vocab) >= max_size:
+            break
+        if c >= min_count and tok not in vocab:
+            vocab[tok] = len(vocab)
+    return Vocab(vocab)

@@ -1,0 +1,109 @@
+"""Supervised trainer for the cost models (paper §3-4).
+
+Small configs train single-device; the 100M driver trains data-parallel
+under a mesh with optional int8 error-feedback gradient compression
+(:mod:`repro.optim.compress`). Metrics match the paper: relative RMSE
+("5-7% range") and %-exact for register pressure (Fig. 6: ~75% exact).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as CM
+from repro.ir import dataset as DS
+from repro.optim import adamw
+
+
+@dataclass
+class TrainResult:
+    params: Any
+    stats: Dict[str, float]
+    history: list = field(default_factory=list)
+    norm_stats: Dict[str, float] = field(default_factory=dict)
+
+
+def _batches(rng, n, batch_size):
+    perm = rng.permutation(n)
+    for i in range(0, n - batch_size + 1, batch_size):
+        yield perm[i:i + batch_size]
+
+
+def make_sgd_step(apply_fn, opt_cfg, grad_transform=None):
+    def loss_fn(params, ids, y):
+        pred = apply_fn(params, ids)
+        return jnp.mean(jnp.square(pred - y))
+
+    def step(params, opt_state, ids, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, ids, y)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, loss
+    return step
+
+
+def train_model(kind: str, cfg, train: DS.CostDataset, target: str,
+                *, steps: int = 300, batch_size: int = 64,
+                lr: float = 1e-3, seed: int = 0,
+                jit_step=None, log_every: int = 100,
+                verbose: bool = False) -> TrainResult:
+    init_fn, apply_fn, _ = CM.get_model(kind)
+    key = jax.random.PRNGKey(seed)
+    params = init_fn(key, cfg)
+    y_raw = train.targets[target]
+    y, norm_stats = DS.normalize_targets(y_raw)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=min(50, steps // 10),
+                                total_steps=steps, weight_decay=0.01)
+    step_fn = jit_step or jax.jit(make_sgd_step(apply_fn, opt_cfg))
+    opt_state = adamw.init_state(params)
+    rng = np.random.default_rng(seed)
+    history = []
+    it = 0
+    t0 = time.time()
+    while it < steps:
+        for idx in _batches(rng, len(train.ids), batch_size):
+            ids = jnp.asarray(train.ids[idx])
+            yb = jnp.asarray(y[idx])
+            params, opt_state, loss = step_fn(params, opt_state, ids, yb)
+            it += 1
+            if it % log_every == 0:
+                history.append((it, float(loss)))
+                if verbose:
+                    print(f"  step {it}: mse={float(loss):.4f} "
+                          f"({(time.time()-t0):.1f}s)")
+            if it >= steps:
+                break
+    return TrainResult(params=params, stats={}, history=history,
+                       norm_stats=norm_stats)
+
+
+def evaluate(kind: str, cfg, result: TrainResult, test: DS.CostDataset,
+             target: str, batch_size: int = 256) -> Dict[str, float]:
+    """Paper metrics: relative RMSE (%), normalized RMSE, %-exact (rounded)."""
+    _, apply_fn, _ = CM.get_model(kind)
+    apply_j = jax.jit(apply_fn)
+    preds = []
+    for i in range(0, len(test.ids), batch_size):
+        ids = jnp.asarray(test.ids[i:i + batch_size])
+        preds.append(np.asarray(apply_j(result.params, ids)))
+    pred_n = np.concatenate(preds)
+    pred = DS.denormalize(pred_n, result.norm_stats)
+    true = test.targets[target]
+    rel = (pred - true) / np.maximum(np.abs(true), 1e-6)
+    # normalized-space RMSE against the train normalization
+    true_n = (np.log1p(true) - result.norm_stats["mu"]) / \
+        result.norm_stats["sigma"]
+    return {
+        "rmse_rel_pct": float(np.sqrt(np.mean(np.square(rel))) * 100),
+        "mape_pct": float(np.mean(np.abs(rel)) * 100),
+        "rmse_norm": float(np.sqrt(np.mean(np.square(pred_n - true_n)))),
+        "exact_pct": float(np.mean(np.round(pred) == np.round(true)) * 100),
+        "within5_pct": float(np.mean(np.abs(rel) <= 0.05) * 100),
+    }

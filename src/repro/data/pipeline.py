@@ -1,0 +1,121 @@
+"""Sharded, deterministic, prefetching data pipeline.
+
+Design mirrors production input pipelines (tf.data/grain style) without the
+dependency: a Source yields indexable records; the Loader owns a deterministic
+shuffle (seeded per epoch), shards by (host, data-parallel rank), batches, and
+prefetches on a background thread. Every batch is tagged with (epoch, step)
+so a restarted job resumes mid-epoch from the checkpointed cursor — the
+fault-tolerance contract (see runtime/fault.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional, Sequence
+
+import numpy as np
+
+
+class ArraySource:
+    """In-memory record source over parallel arrays (e.g. ids + targets)."""
+
+    def __init__(self, **arrays: np.ndarray):
+        lens = {len(v) for v in arrays.values()}
+        assert len(lens) == 1, "all arrays must share leading dim"
+        self.arrays = arrays
+        self.n = lens.pop()
+
+    def __len__(self):
+        return self.n
+
+    def gather(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        return {k: v[idx] for k, v in self.arrays.items()}
+
+
+@dataclass
+class LoaderState:
+    epoch: int = 0
+    step_in_epoch: int = 0
+
+    def as_dict(self):
+        return {"epoch": self.epoch, "step_in_epoch": self.step_in_epoch}
+
+
+class Loader:
+    """Deterministic sharded loader with background prefetch."""
+
+    def __init__(self, source: ArraySource, batch_size: int, *,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1,
+                 drop_remainder: bool = True, prefetch: int = 2,
+                 state: Optional[LoaderState] = None):
+        assert batch_size % num_shards == 0
+        self.source = source
+        self.global_batch = batch_size
+        self.local_batch = batch_size // num_shards
+        self.seed = seed
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+        self.prefetch = prefetch
+        self.state = state or LoaderState()
+
+    def _epoch_perm(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, epoch))
+        return rng.permutation(len(self.source))
+
+    def steps_per_epoch(self) -> int:
+        return len(self.source) // self.global_batch
+
+    def _make_batch(self, epoch: int, step: int) -> Dict[str, np.ndarray]:
+        perm = self._epoch_perm(epoch)
+        start = step * self.global_batch
+        idx = perm[start:start + self.global_batch]
+        local = idx[self.shard_index::self.num_shards]
+        return self.source.gather(local)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            epoch, step = self.state.epoch, self.state.step_in_epoch
+            while not stop.is_set():
+                if step >= self.steps_per_epoch():
+                    epoch, step = epoch + 1, 0
+                batch = self._make_batch(epoch, step)
+                batch["_epoch"] = np.int64(epoch)
+                batch["_step"] = np.int64(step)
+                step += 1
+                q.put(batch)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                b = q.get()
+                self.state.epoch = int(b.pop("_epoch"))
+                self.state.step_in_epoch = int(b.pop("_step")) + 1
+                yield b
+        finally:
+            stop.set()
+            # drain so the producer can observe stop
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                pass
+
+
+def synthetic_lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0
+                         ) -> Iterator[Dict[str, np.ndarray]]:
+    """Synthetic token stream for the LM training drivers (structured enough
+    to have learnable statistics: Zipfian unigram + local repeats)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq + 1), p=probs)
+        rep = rng.random((batch, seq + 1)) < 0.3   # local bigram structure
+        toks[:, 1:] = np.where(rep[:, 1:], toks[:, :-1], toks[:, 1:])
+        yield {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}

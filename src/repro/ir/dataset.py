@@ -1,0 +1,119 @@
+"""Dataset builder: sampled graphs -> (tokens, targets) arrays + vocab.
+
+Mirrors the paper's corpus: >20k MLIR functions from the five families plus
+augmentation; ~10% held out for test. Rows carry the full MLIR text, the
+input/output shapes (via shape tokens), and every target variable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import augment as AUG
+from repro.core import tokenizer as TOK
+from repro.ir import analyzers, printer, samplers
+from repro.ir.graph import Graph
+
+
+@dataclass
+class CostDataset:
+    ids: np.ndarray            # (N, max_seq) int32 token ids
+    targets: Dict[str, np.ndarray]
+    vocab: TOK.Vocab
+    mode: str
+    max_seq: int
+    texts: Optional[List[str]] = None   # raw MLIR (kept for service demos)
+
+    def split(self, test_frac: float = 0.1, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        n = len(self.ids)
+        perm = rng.permutation(n)
+        n_test = int(n * test_frac)
+        te, tr = perm[:n_test], perm[n_test:]
+
+        def take(idx):
+            return CostDataset(
+                ids=self.ids[idx],
+                targets={k: v[idx] for k, v in self.targets.items()},
+                vocab=self.vocab, mode=self.mode, max_seq=self.max_seq)
+        return take(tr), take(te)
+
+    def save(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.savez_compressed(
+            path, ids=self.ids, mode=self.mode, max_seq=self.max_seq,
+            **{f"target_{k}": v for k, v in self.targets.items()},
+            vocab=np.array(list(self.vocab.token_to_id.items()), object))
+
+    @classmethod
+    def load(cls, path: str) -> "CostDataset":
+        z = np.load(path, allow_pickle=True)
+        vocab = TOK.Vocab({k: int(v) for k, v in z["vocab"]})
+        targets = {k[len("target_"):]: z[k] for k in z.files
+                   if k.startswith("target_")}
+        return cls(ids=z["ids"], targets=targets, vocab=vocab,
+                   mode=str(z["mode"]), max_seq=int(z["max_seq"]))
+
+
+def build_dataset(n_graphs: int = 2000, *, mode: str = "ops",
+                  max_seq: int = 256, vocab_size: int = 8192,
+                  augment_factor: int = 1, seed: int = 0,
+                  keep_texts: bool = False,
+                  families: Optional[List[str]] = None) -> CostDataset:
+    """Sample graphs, augment, tokenize, fit vocab, encode, analyze."""
+    rng = np.random.default_rng(seed)
+    fams = families or sorted(samplers.SAMPLERS)
+    graphs: List[Graph] = []
+    for i in range(n_graphs):
+        g = samplers.sample_graph(rng, fams[i % len(fams)])
+        graphs.append(g)
+        for _ in range(augment_factor - 1):
+            graphs.append(AUG.augment(g, rng))
+    token_seqs = [TOK.graph_tokens(g, mode) for g in graphs]
+    vocab = TOK.fit_vocab(token_seqs, max_size=vocab_size)
+    ids = np.stack([vocab.encode(t, max_seq) for t in token_seqs])
+    targets: Dict[str, List[float]] = {k: [] for k in analyzers.TARGETS}
+    for g in graphs:
+        res = analyzers.analyze(g)
+        for k, v in res.items():
+            targets[k].append(v)
+    texts = [printer.to_mlir(g) for g in graphs] if keep_texts else None
+    return CostDataset(
+        ids=ids,
+        targets={k: np.asarray(v, np.float32) for k, v in targets.items()},
+        vocab=vocab, mode=mode, max_seq=max_seq, texts=texts)
+
+
+def build_text_dataset(rows, *, max_seq: int = 1024,
+                       vocab_size: int = 16384,
+                       target: str = "latency_us") -> CostDataset:
+    """Dataset from raw MLIR text (e.g. the StableHLO corpus from
+    ir/stablehlo.py): rows = [(mlir_text, {target: value, ...}), ...].
+
+    This is the paper's lower-dialect pathway — 'affine or scf ... much
+    larger sequences of the order of thousands of tokens'."""
+    from repro.core import tokenizer as TOK
+    token_seqs = [TOK.tokenize_text(text) for text, _ in rows]
+    vocab = TOK.fit_vocab(token_seqs, max_size=vocab_size)
+    ids = np.stack([vocab.encode(t, max_seq) for t in token_seqs])
+    keys = rows[0][1].keys()
+    targets = {k: np.asarray([t[k] for _, t in rows], np.float32)
+               for k in keys}
+    return CostDataset(ids=ids, targets=targets, vocab=vocab,
+                       mode="text", max_seq=max_seq,
+                       texts=[text for text, _ in rows])
+
+
+def normalize_targets(y: np.ndarray) -> Tuple[np.ndarray, Dict[str, float]]:
+    """log1p + z-score; returns (normalized, stats for denorm)."""
+    ly = np.log1p(y)
+    mu, sigma = float(ly.mean()), float(ly.std() + 1e-8)
+    return (ly - mu) / sigma, {"mu": mu, "sigma": sigma}
+
+
+def denormalize(pred: np.ndarray, stats: Dict[str, float]) -> np.ndarray:
+    return np.expm1(pred * stats["sigma"] + stats["mu"])

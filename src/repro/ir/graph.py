@@ -1,0 +1,105 @@
+"""Dataflow-graph IR: SSA ops over tensors, the `xpu` dialect's substrate.
+
+Mirrors the paper's Fig. 2: a function embodies the (sub)graph, operators are
+`xpu.*` opcodes, data dependencies are SSA use-def chains, and values are
+tensors with shape + element dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Shape = Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class Tensor:
+    shape: Shape
+    dtype: str = "f32"
+
+    @property
+    def numel(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        width = {"f32": 4, "bf16": 2, "f16": 2, "i8": 1, "i32": 4}[self.dtype]
+        return self.numel * width
+
+    def mlir(self) -> str:
+        dims = "x".join(str(d) for d in self.shape)
+        return f"tensor<{dims}x{self.dtype}>" if self.shape else \
+            f"tensor<{self.dtype}>"
+
+    def shape_token(self) -> str:
+        """The paper tokenizes a full shape as a single entity."""
+        dims = "x".join(str(d) for d in self.shape)
+        return f"{dims}x{self.dtype}" if self.shape else self.dtype
+
+
+@dataclass
+class Op:
+    opcode: str                 # e.g. "mult", "matmul", "conv2d", "relu"
+    operands: List[int]         # SSA value ids (graph.values indices)
+    result: int                 # SSA id of the produced value
+    attrs: Dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class Graph:
+    """SSA graph. values[i] is the Tensor type of SSA id i; ids < n_args are
+    function arguments (%arg0..); the rest are op results (%0..)."""
+    values: List[Tensor] = field(default_factory=list)
+    n_args: int = 0
+    ops: List[Op] = field(default_factory=list)
+    outputs: List[int] = field(default_factory=list)
+    name: str = "graph"
+
+    def add_arg(self, t: Tensor) -> int:
+        assert not self.ops, "args must precede ops"
+        self.values.append(t)
+        self.n_args += 1
+        return len(self.values) - 1
+
+    def add_op(self, opcode: str, operands: Sequence[int], out: Tensor,
+               **attrs) -> int:
+        self.values.append(out)
+        vid = len(self.values) - 1
+        self.ops.append(Op(opcode, list(operands), vid, attrs))
+        return vid
+
+    def ssa_name(self, vid: int) -> str:
+        if vid < self.n_args:
+            return f"%arg{vid}"
+        return f"%{vid - self.n_args}"
+
+    def validate(self) -> None:
+        defined = set(range(self.n_args))
+        for op in self.ops:
+            for o in op.operands:
+                assert o in defined, f"use before def: {o} in {op.opcode}"
+            assert op.result not in defined
+            defined.add(op.result)
+        for o in self.outputs:
+            assert o in defined
+
+    def toposort_is_program_order(self) -> bool:
+        try:
+            self.validate()
+            return True
+        except AssertionError:
+            return False
+
+
+# Op categories used by the analyzers (vector-ALU vs MXU vs memory ops).
+ELEMENTWISE = {"add", "sub", "mult", "div", "relu", "gelu", "silu", "tanh",
+               "sigmoid", "exp", "neg", "abs", "maximum", "minimum", "rsqrt"}
+REDUCTION = {"softmax", "layernorm", "batchnorm", "reduce_sum", "reduce_max",
+             "reduce_mean"}
+CONTRACTION = {"matmul", "conv2d", "depthwise_conv2d", "attention"}
+DATA_MOVEMENT = {"reshape", "transpose", "concat", "slice", "broadcast",
+                 "pool_max", "pool_avg", "upsample", "pad"}
+ALL_OPCODES = sorted(ELEMENTWISE | REDUCTION | CONTRACTION | DATA_MOVEMENT)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused Conv1D tower + ReLU + MaxPool for the cost model.
+
+The paper's deployed model runs thousands of inferences per compilation
+session, so this is the perf-critical hot spot. A naive XLA lowering runs
+each Conv1D as a separate HBM round-trip (6 layers x (B,S,C) activations);
+at C=64 the tower is heavily memory-bound (arithmetic intensity ~= fs*C/6
+FLOPs/byte). The fusion keeps the whole tower in VMEM: one HBM read of the
+embedded tokens, one HBM write of the pooled features — a ~7x reduction in
+HBM traffic (see benchmarks/kernel_bench.py).
+
+TPU mapping:
+* channels sit on the 128-wide lane dimension (C padded to 128);
+* sequence sits on sublanes; each conv tap is a (S, Cin) @ (Cin, Cout)
+  MXU matmul — the fs-tap conv = fs shifted matmuls accumulated in fp32;
+* grid over batch tiles; weights are broadcast to every grid step
+  (index_map pins them to block 0).
+
+VMEM budget per grid step (defaults: bblk=8, S<=1024, C<=128 fp32):
+    x tile 8*1024*128*4 = 4 MiB, two ping-pong layer buffers 8 MiB,
+    weights sum(fs*C*C)*4 << 1 MiB  -> fits the ~16 MiB VMEM of v5e.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import numpy as np
+
+
+def _kernel(x_ref, mask_ref, *refs, n_layers: int, filter_sizes, out_dtype):
+    """refs = (w0, b0, w1, b1, ..., out_ref)."""
+    out_ref = refs[-1]
+    x = x_ref[...].astype(jnp.float32)            # (bblk, S, C0)
+    mask = mask_ref[...]                          # (bblk, S)
+    h = x
+    S = x.shape[1]
+    for i in range(n_layers):
+        w = refs[2 * i][...].astype(jnp.float32)      # (fs, Cin, Cout)
+        b = refs[2 * i + 1][...].astype(jnp.float32)  # (Cout,)
+        fs = filter_sizes[i]
+        pad_l, pad_r = (fs - 1) // 2, fs // 2
+        acc = jnp.zeros(h.shape[:2] + (w.shape[2],), jnp.float32)
+        # conv = sum of shifted matmuls on the MXU
+        hp = jnp.pad(h, ((0, 0), (pad_l, pad_r), (0, 0)))
+        for k in range(fs):
+            acc += jax.lax.dot_general(
+                hp[:, k:k + S, :], w[k],
+                dimension_numbers=(((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        h = jnp.maximum(acc + b, 0.0)             # ReLU
+    # MaxPool1D over valid sequence positions
+    h = jnp.where(mask[..., None] > 0, h, -jnp.inf)
+    pooled = jnp.maximum(h.max(axis=1), 0.0)
+    out_ref[...] = pooled.astype(out_dtype)
+
+
+def conv1d_stack_fused(x: jax.Array, weights: Sequence[jax.Array],
+                       biases: Sequence[jax.Array],
+                       mask: jax.Array, *, bblk: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """Fused tower. x: (B, S, C0); mask: (B, S) (1 = valid token).
+    Returns (B, C_last). Pads B to a bblk multiple and C dims are used
+    as given (pad to 128 upstream for lane alignment on real hardware)."""
+    B, S, C0 = x.shape
+    n_layers = len(weights)
+    filter_sizes = tuple(int(w.shape[0]) for w in weights)
+    c_last = weights[-1].shape[2]
+    Bp = ((B + bblk - 1) // bblk) * bblk
+    if Bp != B:
+        x = jnp.pad(x, ((0, Bp - B), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, Bp - B), (0, 0)))
+    grid = (Bp // bblk,)
+
+    in_specs = [
+        pl.BlockSpec((bblk, S, C0), lambda i: (i, 0, 0)),
+        pl.BlockSpec((bblk, S), lambda i: (i, 0)),
+    ]
+    operands = [x, mask]
+    for w, b in zip(weights, biases):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        operands += [w, b]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_layers=n_layers,
+                          filter_sizes=filter_sizes, out_dtype=x.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bblk, c_last), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, c_last), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:B]

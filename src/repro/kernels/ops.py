@@ -1,0 +1,46 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``conv_tower_apply`` mirrors core/models.py::conv_apply but runs the fused
+kernel for the Conv1D+ReLU+MaxPool tower; on CPU it transparently uses
+interpret mode (the TPU path compiles the same kernel natively).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d_stack import conv1d_stack_fused
+from repro.kernels import ref as REF
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bblk", "interpret"))
+def conv1d_stack(x, weights: Sequence, biases: Sequence, mask, *,
+                 bblk: int = 8, interpret: bool | None = None):
+    interp = _on_cpu() if interpret is None else interpret
+    return conv1d_stack_fused(x, list(weights), list(biases), mask,
+                              bblk=bblk, interpret=interp)
+
+
+def conv_tower_apply(params, ids, *, use_kernel: bool = True,
+                     interpret: bool | None = None):
+    """Drop-in for core.models.conv_apply using the fused kernel."""
+    mask = (ids != 0).astype(jnp.float32)
+    x = params["emb"][ids] * mask[..., None]
+    weights = [l["w"] for l in params["convs"]]
+    biases = [l["b"] for l in params["convs"]]
+    if use_kernel:
+        h = conv1d_stack(x, weights, biases, mask, interpret=interpret)
+    else:
+        h = REF.conv1d_stack_ref(x, weights, biases, mask)
+    for i, layer in enumerate(params["fc"]):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params["fc"]) - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose reference)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d_same(x, w, b):
+    """'same'-padded 1D conv, matching core/models.py::conv1d.
+    x: (B, S, Cin); w: (fs, Cin, Cout); b: (Cout,)."""
+    fs = w.shape[0]
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding=[((fs - 1) // 2, fs // 2)],
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b
+
+
+def conv1d_stack_ref(x, weights: Sequence, biases: Sequence,
+                     mask=None):
+    """The paper's Conv1D tower: N x (conv1d 'same' + ReLU), then MaxPool1D
+    over the sequence. x: (B, S, C0) -> (B, C_last).
+
+    mask: optional (B, S) validity mask — padded positions are excluded
+    from the final max (set to -inf before pooling)."""
+    h = x
+    for w, b in zip(weights, biases):
+        h = jax.nn.relu(conv1d_same(h, w, b))
+    if mask is not None:
+        h = jnp.where(mask[..., None] > 0, h, -jnp.inf)
+    out = h.max(axis=1)
+    # all-masked rows: ReLU output floor is 0
+    return jnp.maximum(out, 0.0) if mask is not None else out
+
+
+def decode_attention_ref(q, k_cache, v_cache, index):
+    """Grouped decode attention oracle. q: (B, nkv, G, D);
+    k_cache/v_cache: (B, nkv, S, D); attends positions <= index."""
+    import numpy as np
+    D = q.shape[-1]
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / np.sqrt(D)
+    S = k_cache.shape[2]
+    valid = jnp.arange(S) <= index
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", w, v_cache.astype(jnp.float32))

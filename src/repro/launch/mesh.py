@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4, *,
+                    multi_pod: bool = False):
+    """Small mesh for tests (requires >= n_data*n_model host devices)."""
+    shape = (2, n_data, n_model) if multi_pod else (n_data, n_model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,84 @@
+"""Batched inference server driver for the deployed cost model.
+
+Simulates the DL-compiler's usage pattern: bursts of small prediction
+requests (one per candidate transformation) that the service batches,
+caches, and answers. Prints throughput and cache statistics.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 2000
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.costmodel import COSTMODEL_BASE, CostModelConfig
+from repro.core import models as CM
+from repro.core import trainer as TR
+from repro.core.service import (CostModelService, FusionAdvisor,
+                                RecompileAdvisor, UnrollAdvisor)
+from repro.core import augment as AUG
+from repro.ir import dataset as DS, samplers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--n-graphs", type=int, default=1500)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = CostModelConfig(name="serve", vocab_size=4096, max_seq=160,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    ds = DS.build_dataset(args.n_graphs, mode="ops", max_seq=160,
+                          vocab_size=4096, augment_factor=2, seed=args.seed)
+    tr, te = ds.split(0.1)
+    print("training latency cost model for the service...")
+    res_lat = TR.train_model("conv1d", cfg, tr, "latency_us",
+                             steps=args.train_steps, batch_size=128, lr=2e-3)
+    res_reg = TR.train_model("conv1d", cfg, tr, "register_pressure",
+                             steps=args.train_steps, batch_size=128, lr=2e-3)
+
+    lat_svc = CostModelService("conv1d", cfg, res_lat.params, ds.vocab,
+                               res_lat.norm_stats, mode="ops", max_seq=160)
+    reg_svc = CostModelService("conv1d", cfg, res_reg.params, ds.vocab,
+                               res_reg.norm_stats, mode="ops", max_seq=160)
+
+    rng = np.random.default_rng(args.seed + 1)
+    graphs = [samplers.sample_graph(rng) for _ in range(args.requests // 2)]
+    # compiler sessions re-query slightly-modified graphs: 50% cache hits
+    graphs = graphs + [g for g in graphs]
+    rng.shuffle(graphs)
+
+    t0 = time.time()
+    preds = lat_svc.predict_graphs(graphs)
+    dt = time.time() - t0
+    print(f"served {len(graphs)} requests in {dt:.2f}s "
+          f"({len(graphs)/dt:.0f} req/s, "
+          f"cache={len(lat_svc._cache)} unique)")
+    print(f"predicted latency: p50={np.median(preds):.1f}us "
+          f"max={preds.max():.1f}us")
+
+    fusion = FusionAdvisor(lat_svc)
+    unroll = UnrollAdvisor(lat_svc, reg_svc, register_budget=64)
+    recompile = RecompileAdvisor(lat_svc)
+
+    g = samplers.sample_graph(rng, "resnet")
+    do_fuse, c0, c1 = fusion.advise(g)
+    print(f"fusion advisor: fuse={do_fuse} "
+          f"(unfused={c0:.1f}us fused={c1:.1f}us)")
+    adv = unroll.advise(g)
+    print(f"unroll advisor: best_factor={adv['best_factor']} "
+          f"per-iter latency={ {k: round(v,1) for k, v in adv['per_iter_latency'].items()} }")
+    g2 = AUG.jitter_shapes(g, rng)
+    dec = recompile.advise(g, g2)
+    print(f"recompile advisor: recompile={dec['recompile']} "
+          f"shift={dec['shift']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Production training driver for the MLIR cost model.
+
+Wires together every substrate layer: dataset build (or load), sharded data
+pipeline, model init, mesh + sharding rules, AdamW, int8 error-feedback
+gradient compression on the DP axis, fault-tolerant supervisor (atomic
+checkpoints, resume, preemption handling), and evaluation.
+
+    PYTHONPATH=src python -m repro.launch.train --preset small --steps 300
+    PYTHONPATH=src python -m repro.launch.train --preset 100m --steps 200 \
+        --mesh-data 2   # DP across host devices if available
+
+On the production cluster the same driver runs under the 16x16 mesh with
+``--mesh-data 16 --mesh-model 16`` (the cost model is small enough that DP
+dominates; model axes shard the embedding + wide FC layers).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.costmodel import (COSTMODEL_100M, COSTMODEL_BASE,
+                                     COSTMODEL_SMALL, CostModelConfig)
+from repro.core import models as CM
+from repro.core import trainer as TR
+from repro.data import pipeline as PIPE
+from repro.ir import dataset as DS
+from repro.optim import adamw, compress
+from repro.runtime import fault
+from repro.runtime.sharding import ShardingRules
+
+PRESETS = {"small": COSTMODEL_SMALL, "base": COSTMODEL_BASE,
+           "100m": COSTMODEL_100M}
+
+
+def build_or_load_dataset(args, cfg) -> DS.CostDataset:
+    path = args.dataset
+    if path and os.path.exists(path):
+        return DS.CostDataset.load(path)
+    ds = DS.build_dataset(args.n_graphs, mode=args.mode,
+                          max_seq=cfg.max_seq, vocab_size=cfg.vocab_size,
+                          augment_factor=2, seed=args.seed)
+    if path:
+        ds.save(path)
+    return ds
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--model", default="conv1d",
+                    choices=sorted(CM.MODELS))
+    ap.add_argument("--target", default="register_pressure")
+    ap.add_argument("--mode", default="ops",
+                    choices=["ops", "ops_operands"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--n-graphs", type=int, default=2000)
+    ap.add_argument("--dataset", default=None)
+    ap.add_argument("--ckpt-dir", default="checkpoints/costmodel")
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--eval-only", action="store_true")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    ds = build_or_load_dataset(args, cfg)
+    train, test = ds.split(0.1, seed=args.seed)
+    print(f"dataset: {len(train.ids)} train / {len(test.ids)} test, "
+          f"vocab={ds.vocab.size}, mode={ds.mode}")
+
+    mesh = jax.make_mesh((args.mesh_data, args.mesh_model),
+                         ("data", "model"))
+    rules = ShardingRules(mesh)
+    init_fn, apply_fn, axes_fn = CM.get_model(args.model)
+    params = init_fn(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"model: {args.model}/{args.preset}, {n_params/1e6:.1f}M params")
+
+    y, norm_stats = DS.normalize_targets(train.targets[args.target])
+    src = PIPE.ArraySource(ids=train.ids, y=y.astype(np.float32))
+    loader = PIPE.Loader(src, args.batch, seed=args.seed)
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=min(50, args.steps // 10),
+                                weight_decay=0.01)
+    err_state = compress.init_error_state(params) if args.compress_grads \
+        else None
+
+    def loss_fn(p, ids, yy):
+        return jnp.mean(jnp.square(apply_fn(p, ids) - yy))
+
+    @jax.jit
+    def train_step(state, ids, yy):
+        params, opt_state, err = state
+        loss, grads = jax.value_and_grad(loss_fn)(params, ids, yy)
+        if err is not None:
+            grads, err = compress.compress_grads(grads, err)
+        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        return (params, opt_state, err), loss
+
+    sup = fault.TrainSupervisor(args.ckpt_dir, save_every=args.save_every)
+    sup.install_signal_handler()
+    state = (params, adamw.init_state(params), err_state)
+    state, start, extra = sup.try_restore(state)
+    if start:
+        print(f"resumed from step {start}")
+        loader.state = PIPE.LoaderState(**extra.get("loader", {}))
+
+    it = iter(loader)
+    losses = []
+
+    def step_fn(state, step):
+        batch = next(it)
+        state, loss = train_step(state, jnp.asarray(batch["ids"]),
+                                 jnp.asarray(batch["y"]))
+        losses.append(float(loss))
+        return state
+
+    def on_step(step, dt):
+        if step % 50 == 0 or step == args.steps:
+            print(f"step {step}: loss={losses[-1]:.4f} ({dt*1e3:.0f} ms)")
+
+    if not args.eval_only:
+        t0 = time.time()
+        with mesh:
+            state = sup.run(state, step_fn, args.steps, start_step=start,
+                            extra_fn=lambda: {"loader":
+                                              loader.state.as_dict()},
+                            on_step=on_step)
+        print(f"trained {args.steps - start} steps in "
+              f"{time.time()-t0:.1f}s")
+
+    result = TR.TrainResult(params=state[0], stats={},
+                            norm_stats=norm_stats)
+    metrics = TR.evaluate(args.model, cfg, result, test, args.target)
+    print("eval:", json.dumps({k: round(v, 3) for k, v in metrics.items()}))
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""train_step / prefill_step / decode_step builders + input_specs.
+
+``input_specs(arch, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input (no allocation) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as MODEL
+from repro.optim import adamw
+
+
+def cross_entropy_loss(logits, labels, vocab: int):
+    """logits: (B, S, Vpad) (any float dtype); labels int32 with -1 = masked.
+    Padded-vocab columns are masked out of the softmax."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad > vocab:
+        col = jnp.arange(vpad)
+        logits = jnp.where(col[None, None, :] < vocab, logits, -1e30)
+    mask = labels >= 0
+    safe_labels = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def fused_unembed_loss(h, table, labels, vocab: int, *, chunk: int = 512,
+                       rules=None):
+    """Sequence-chunked unembed+cross-entropy: full (B, S, V) logits are
+    never materialized — each chunk's logits live only inside the scan body
+    (a large activation-memory win at 32k seq / 150k vocab)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    vpad = table.shape[0]
+    col = jnp.arange(vpad)
+
+    def one(carry, xs):
+        hx, lx = xs
+        logits = jnp.einsum("bsd,vd->bsv", hx, table.astype(hx.dtype))
+        if rules is not None:
+            logits = rules.constrain(logits, "batch", None, "vocab")
+        logits = logits.astype(jnp.float32)
+        if vpad > vocab:
+            logits = jnp.where(col[None, None, :] < vocab, logits, -1e30)
+        mask = lx >= 0
+        safe = jnp.where(mask, lx, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum, cnt = carry
+        return (nll_sum + ((logz - gold) * mask).sum(),
+                cnt + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(one, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc))
+    return nll / jnp.maximum(cnt, 1)
+
+
+def make_loss_fn(cfg: ArchConfig, rules=None, remat=True):
+    def loss_fn(params, batch):
+        h, aux = MODEL.forward(params, cfg, batch, rules=rules,
+                               remat=remat, unembed=False)
+        loss = fused_unembed_loss(h, MODEL.unembed_table(params, cfg),
+                                  batch["labels"], cfg.vocab, rules=rules)
+        return loss + aux, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    rules=None, remat=True, grad_transform=None):
+    """Returns train_step(params, opt_state, batch) -> (params', state', metrics).
+
+    grad_transform: optional fn(grads) -> grads (e.g. compression hook) applied
+    before the optimizer.
+    """
+    loss_fn = make_loss_fn(cfg, rules=rules, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, inner), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"total_loss": loss, **inner, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, rules=None):
+    """prefill_step(params, batch) -> last-token logits (B, Vpad)."""
+    def prefill_step(params, batch):
+        logits, _ = MODEL.forward(params, cfg, batch, rules=rules,
+                                  remat=False)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, rules=None):
+    """decode_step(params, cache, tokens, index) -> (next_token, new_cache)."""
+    def decode_step(params, cache, tokens, index):
+        logits, new_cache = MODEL.decode_forward(params, cfg, tokens, cache,
+                                                 index, rules=rules)
+        vpad = logits.shape[-1]
+        if vpad > cfg.vocab:
+            col = jnp.arange(vpad)
+            logits = jnp.where(col[None, :] < cfg.vocab,
+                               logits.astype(jnp.float32), -1e30)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+    return decode_step
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of this (arch, shape)."""
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    S = shape.seq_len
+    specs: Dict[str, Any] = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = sds((B, S), jnp.int32)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = sds((B, cfg.vision_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.frontend == "audio":
+        specs["frame_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+    if shape.kind == "prefill" and "labels" not in specs:
+        pass
+    return specs
+
+
+def abstract_params(cfg: ArchConfig):
+    """Param ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: MODEL.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(abs_params):
+    return jax.eval_shape(adamw.init_state, abs_params)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                   kv_dtype=jnp.bfloat16):
+    return jax.eval_shape(functools.partial(
+        MODEL.init_cache, cfg, batch, max_seq, kv_dtype=kv_dtype))
+
+
+def opt_state_axes(param_axes_tree):
+    """Optimizer-state logical axes mirror the param axes."""
+    return {"m": param_axes_tree, "v": param_axes_tree, "count": ()}

@@ -1,0 +1,296 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with exponential gating).
+
+TPU adaptation notes (see DESIGN.md):
+* mLSTM trains with the stabilized *chunkwise* formulation — quadratic only
+  within a chunk, O(d_head^2) carried state across chunks — which maps to
+  MXU matmuls instead of a length-S serial scan. Decode is the O(1)
+  recurrent update (this is why xlstm runs the long_500k shape).
+* sLSTM is inherently sequential (the paper ships CUDA kernels for it); on
+  TPU it lowers to a single fused lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, rms_norm
+
+MLSTM_CHUNK = 256
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_init(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, dh = cfg.n_heads, cfg.resolved_head_dim
+    x = cfg.xlstm
+    di = int(x.proj_factor_mlstm * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((d,)),
+        "up_proj": _init(ks[0], (d, 2 * di)),
+        "conv_w": _init(ks[1], (x.conv1d_kernel, di), scale=0.5),
+        "conv_b": jnp.zeros((di,)),
+        "wq": _init(ks[2], (di, H, dh)),
+        "wk": _init(ks[3], (di, H, dh)),
+        "wv": _init(ks[4], (di, H, dh)),
+        "w_if": _init(ks[5], (di, 2 * H), scale=0.02),
+        "b_i": jnp.zeros((H,)) - 3.0,
+        "b_f": jnp.zeros((H,)) + 3.0,
+        "out_norm": jnp.ones((H * dh,)),
+        "down_proj": _init(ks[6], (H * dh, d)),
+        "skip": jnp.ones((di,)),
+    }
+
+
+def mlstm_axes(cfg):
+    return {
+        "norm": (None,), "up_proj": ("embed", "ffn"),
+        "conv_w": (None, "ffn"), "conv_b": ("ffn",),
+        "wq": ("ffn", "heads", None), "wk": ("ffn", "heads", None),
+        "wv": ("ffn", "heads", None),
+        "w_if": ("ffn", None), "b_i": (None,), "b_f": (None,),
+        "out_norm": (None,), "down_proj": (None, "embed"), "skip": ("ffn",),
+    }
+
+
+def _mlstm_cell_chunkwise(q, k, v, li, lf):
+    """Stabilized chunkwise mLSTM. q,k,v: (B,H,S,dh); li,lf: (B,H,S) log-gates.
+    Returns h: (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    L = min(MLSTM_CHUNK, S)
+    n_chunks = -(-S // L)
+    pad = n_chunks * L - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    q = q * (dh ** -0.5)
+
+    def rsh(t, feat):
+        newshape = (B, H, n_chunks, L) + ((t.shape[-1],) if feat else ())
+        perm = (2, 0, 1, 3, 4) if feat else (2, 0, 1, 3)
+        return t.reshape(newshape).transpose(perm)
+
+    qs, ks_, vs = rsh(q, True), rsh(k, True), rsh(v, True)
+    lis, lfs = rsh(li, False), rsh(lf, False)
+
+    def step(carry, inp):
+        C, n, m = carry          # C: (B,H,dh,dh); n: (B,H,dh); m: (B,H)
+        qc, kc, vc, lic, lfc = inp
+        b = jnp.cumsum(lfc, axis=-1)                        # B,H,L inclusive
+        # intra-chunk log weights: D[i,j] = b_i - b_j + li_j  (j<=i)
+        logD = b[..., :, None] - b[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        logD = jnp.where(tri, logD, -1e30)
+        inter = b + m[..., None]                            # B,H,L
+        m_i = jnp.maximum(inter, logD.max(-1))              # B,H,L
+        d_intra = jnp.exp(logD - m_i[..., None])
+        w_inter = jnp.exp(inter - m_i)                      # B,H,L
+        scores = jnp.einsum("bhid,bhjd->bhij", qc, kc) * d_intra
+        h_intra = jnp.einsum("bhij,bhjd->bhid", scores, vc)
+        h_inter = w_inter[..., None] * jnp.einsum("bhid,bhde->bhie", qc, C)
+        norm_intra = scores.sum(-1)
+        norm_inter = w_inter * jnp.einsum("bhid,bhd->bhi", qc, n)
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter),
+                            jnp.exp(-m_i))
+        h = (h_intra + h_inter) / denom[..., None]
+        # update carried state to end of chunk
+        bL = b[..., -1]                                     # B,H
+        a = bL[..., None] - b + lic                         # B,H,L
+        m_new = jnp.maximum(bL + m, a.max(-1))
+        scale_old = jnp.exp(bL + m - m_new)
+        wa = jnp.exp(a - m_new[..., None])                  # B,H,L
+        C_new = scale_old[..., None, None] * C + \
+            jnp.einsum("bhj,bhjd,bhje->bhde", wa, kc, vc)
+        n_new = scale_old[..., None] * n + \
+            jnp.einsum("bhj,bhjd->bhd", wa, kc)
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0),
+                         (qs, ks_, vs, lis, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, n_chunks * L, dh)
+    return h[:, :, :S]
+
+
+def _mlstm_cell_step(state, q, k, v, li, lf):
+    """O(1) decode update. q,k,v: (B,H,dh); li,lf: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    q = q * (dh ** -0.5)
+    m_new = jnp.maximum(lf + m, li)
+    f_ = jnp.exp(lf + m - m_new)
+    i_ = jnp.exp(li - m_new)
+    C_new = f_[..., None, None] * C + \
+        i_[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_block_apply(p, x, cfg, *, rules=None, cdt=jnp.bfloat16,
+                      state: Optional[Dict] = None):
+    """x: (B,S,D) -> (out, new_state)."""
+    from repro.models.mamba import _causal_conv
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.resolved_head_dim
+    xi = rms_norm(x, p["norm"], cfg.norm_eps).astype(cdt)
+    up = xi @ p["up_proj"].astype(cdt)
+    inner, z = jnp.split(up, 2, axis=-1)
+    if rules is not None:
+        inner = rules.constrain(inner, "batch", None, "ffn")
+    conv_state = state["conv"] if state is not None else None
+    cx, new_conv = _causal_conv(inner, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt), conv_state)
+    cx = jax.nn.silu(cx)
+    q = jnp.einsum("bsi,ihd->bshd", cx, p["wq"].astype(cdt))
+    k = jnp.einsum("bsi,ihd->bshd", cx, p["wk"].astype(cdt))
+    v = jnp.einsum("bsi,ihd->bshd", inner, p["wv"].astype(cdt))
+    gates = (cx @ p["w_if"].astype(cdt)).astype(jnp.float32)
+    gi, gf = jnp.split(gates, 2, axis=-1)                    # B,S,H
+    li = (gi + p["b_i"]).transpose(0, 2, 1)                  # B,H,S
+    lf = jax.nn.log_sigmoid(gf + p["b_f"]).transpose(0, 2, 1)
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+    kT = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vT = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    if state is None:
+        h = _mlstm_cell_chunkwise(qT, kT, vT, li, lf)
+        new_cell = None
+    else:
+        new_cell, h1 = _mlstm_cell_step(state["cell"], qT[:, :, 0],
+                                        kT[:, :, 0], vT[:, :, 0],
+                                        li[:, :, 0], lf[:, :, 0])
+        h = h1[:, :, None, :]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, H * dh).astype(cdt)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    h = h + p["skip"].astype(cdt)[:H * dh] * cx[..., :H * dh]
+    out = (h * jax.nn.silu(z[..., :H * dh])) @ p["down_proj"].astype(cdt)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "cell": new_cell}
+    return x + out.astype(x.dtype), new_state
+
+
+def mlstm_init_state(cfg, batch):
+    x = cfg.xlstm
+    H, dh = cfg.n_heads, cfg.resolved_head_dim
+    di = int(x.proj_factor_mlstm * cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, x.conv1d_kernel - 1, di), jnp.float32),
+        "cell": {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                 "n": jnp.zeros((batch, H, dh), jnp.float32),
+                 "m": jnp.full((batch, H), -1e30, jnp.float32)},
+    }
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_init(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    x = cfg.xlstm
+    df = int(x.proj_factor_slstm * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,)),
+        "w_gates": _init(ks[0], (d, 4 * d)),          # i,f,z,o
+        "r_gates": _init(ks[1], (H, dh, 4 * dh),
+                         scale=1.0 / np.sqrt(dh)),    # block-diag recurrent
+        "b_gates": jnp.concatenate([jnp.zeros((d,)) - 3.0,
+                                    jnp.zeros((d,)) + 3.0,
+                                    jnp.zeros((2 * d,))]),
+        "gn": jnp.ones((d,)),
+        "ffn_up": _init(ks[2], (d, 2 * df)),
+        "ffn_down": _init(ks[3], (df, d)),
+    }
+
+
+def slstm_axes(cfg):
+    return {
+        "norm": (None,), "w_gates": ("embed", "ffn"),
+        "r_gates": (None, None, None), "b_gates": (None,),
+        "gn": (None,),
+        "ffn_up": ("embed", "ffn"), "ffn_down": ("ffn", "embed"),
+    }
+
+
+def _slstm_scan(wx, r, state):
+    """wx: (B,S,4d) input contributions; r: (H,dh,4dh).
+    state: dict(c,n,h,m) each (B,d) except m. Sequential scan over S."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    H = r.shape[0]
+    dh = d // H
+
+    def step(carry, wxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r)          # (B, H, 4*dh)
+        # reorder per-head (i,f,z,o) blocks into global (i,f,z,o) layout
+        rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+        gates = wxt + rec
+        gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)
+        i_ = jnp.exp(gi - m_new)
+        f_ = jnp.exp(gf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c_new = f_ * c + i_ * z
+        n_new = f_ * n + i_
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    carry, hs = jax.lax.scan(step, carry0, wx.transpose(1, 0, 2))
+    new_state = dict(zip(("c", "n", "h", "m"), carry))
+    return hs.transpose(1, 0, 2), new_state
+
+
+def slstm_block_apply(p, x, cfg, *, rules=None, cdt=jnp.bfloat16,
+                      state: Optional[Dict] = None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    xi = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = (xi.astype(cdt) @ p["w_gates"].astype(cdt)).astype(jnp.float32)
+    wx = wx + p["b_gates"]
+    # recurrent gate layout (B,4d) must split into per-head blocks; reshape
+    # w_gates output as (B,S,4,H,dh) -> (B,S,H,4dh)-compatible 4d flat.
+    if state is None:
+        st = slstm_init_state(cfg, B)
+    else:
+        st = state
+    hs, new_state = _slstm_scan(wx, p["r_gates"], st)
+    hs = rms_norm(hs.astype(jnp.float32), p["gn"], cfg.norm_eps).astype(cdt)
+    up = hs @ p["ffn_up"].astype(cdt)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = (jax.nn.gelu(a) * b) @ p["ffn_down"].astype(cdt)
+    return x + out.astype(x.dtype), (new_state if state is not None else None)
+
+
+def slstm_init_state(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30}
+
+
+def count_params(cfg) -> int:
+    """Analytic param count for the xLSTM LM (embedding tied)."""
+    import jax
+    k = jax.random.PRNGKey(0)
+    n_pairs = max(cfg.n_layers // 2, 1)
+    shapes = jax.eval_shape(lambda kk: {
+        "m": mlstm_init(kk, cfg), "s": slstm_init(kk, cfg)}, k)
+    per_pair = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    emb = cfg.vocab * cfg.d_model
+    return n_pairs * per_pair + emb + cfg.d_model

@@ -1,0 +1,135 @@
+"""Cost-model core tests: tokenizer, analyzers, dataset, training conv."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import COSTMODEL_SMALL
+from repro.core import augment as AUG
+from repro.core import models as CM
+from repro.core import tokenizer as TOK
+from repro.core import trainer as TR
+from repro.ir import analyzers, dataset as DS, printer, samplers
+from repro.ir.graph import Graph, Tensor
+
+
+@pytest.fixture(scope="module")
+def small_dataset():
+    return DS.build_dataset(300, mode="ops", max_seq=96, vocab_size=512,
+                            augment_factor=2, seed=1)
+
+
+def test_samplers_produce_valid_graphs(rng):
+    for fam in samplers.SAMPLERS:
+        for _ in range(5):
+            g = samplers.sample_graph(rng, fam)
+            g.validate()
+            assert g.ops and g.outputs
+
+
+def test_printer_emits_mlir(rng):
+    g = samplers.sample_graph(rng, "bert")
+    text = printer.to_mlir(g)
+    assert text.startswith("func.func @")
+    assert '"xpu.matmul"' in text
+    assert "tensor<" in text and "return" in text
+
+
+def test_analyzers_deterministic_and_positive(rng):
+    g = samplers.sample_graph(rng, "resnet")
+    a1, a2 = analyzers.analyze(g), analyzers.analyze(g)
+    assert a1 == a2
+    assert a1["register_pressure"] > 0
+    assert a1["valu_utilization"] > 0
+    assert a1["latency_us"] > 0
+
+
+def test_register_pressure_liveness():
+    """Hand-built graph: chain vs fan-out have different pressure."""
+    t = Tensor((8, 1024))  # 1 vreg unit... 8*1024/1024 = 8 units
+    chain = Graph()
+    a = chain.add_arg(t)
+    x = chain.add_op("relu", [a], t)
+    x = chain.add_op("relu", [x], t)
+    chain.outputs = [x]
+    fan = Graph()
+    a = fan.add_arg(t)
+    x1 = fan.add_op("relu", [a], t)
+    x2 = fan.add_op("relu", [a], t)
+    x3 = fan.add_op("add", [x1, x2], t)
+    fan.outputs = [x3]
+    assert analyzers.register_pressure(fan) > \
+        analyzers.register_pressure(chain)
+
+
+def test_tokenizer_modes(rng):
+    g = samplers.sample_graph(rng, "unet")
+    ops = TOK.graph_tokens(g, "ops")
+    opnd = TOK.graph_tokens(g, "ops_operands")
+    assert len(opnd) > len(ops)  # paper: ~4x longer
+    assert any(t.startswith("xpu.") for t in ops)
+    assert not any(t.startswith("%") for t in ops)   # operands dropped
+    assert any(t.startswith("%") for t in opnd)
+
+
+def test_vocab_encode_oov():
+    v = TOK.fit_vocab([["xpu.add", "8x8xf32"]], max_size=16)
+    ids = v.encode(["xpu.add", "UNSEEN_TOKEN", "8x8xf32"], max_len=8)
+    assert ids[1] == v.token_to_id[TOK.UNK]
+    assert ids[0] == v.token_to_id["xpu.add"]
+    assert v.oov_rate(["xpu.add", "zzz"]) == 0.5
+
+
+def test_tokenize_raw_mlir_text():
+    txt = ('%3 = "stablehlo.dot_general"(%1, %2) : '
+           '(tensor<8x64xf32>, tensor<64x32xf32>) -> tensor<8x32xf32>')
+    toks = TOK.tokenize_text(txt)
+    assert "stablehlo.dot_general" in toks
+    assert "8x64xf32" in toks
+
+
+def test_augment_reorder_preserves_semantics(rng):
+    g = samplers.sample_graph(rng, "ssd")
+    g2 = AUG.reorder_ops(g, rng)
+    g2.validate()
+    assert len(g2.ops) == len(g.ops)
+    # vALU utilization is schedule-invariant
+    assert analyzers.valu_utilization(g) == analyzers.valu_utilization(g2)
+    assert analyzers.latency_us(g) == pytest.approx(analyzers.latency_us(g2))
+
+
+def test_dataset_roundtrip(tmp_path, small_dataset):
+    p = str(tmp_path / "ds.npz")
+    small_dataset.save(p)
+    ds2 = DS.CostDataset.load(p)
+    np.testing.assert_array_equal(ds2.ids, small_dataset.ids)
+    assert ds2.vocab.size == small_dataset.vocab.size
+    for k in small_dataset.targets:
+        np.testing.assert_allclose(ds2.targets[k],
+                                   small_dataset.targets[k])
+
+
+def test_models_forward_shapes(small_dataset):
+    ids = jnp.asarray(small_dataset.ids[:4, :COSTMODEL_SMALL.max_seq])
+    for kind in CM.MODELS:
+        init_fn, apply_fn, _ = CM.get_model(kind)
+        params = init_fn(jax.random.PRNGKey(0), COSTMODEL_SMALL)
+        out = apply_fn(params, ids)
+        assert out.shape == (4,)
+        assert bool(jnp.isfinite(out).all())
+
+
+def test_training_reduces_loss(small_dataset):
+    tr, _ = small_dataset.split(0.1)
+    res = TR.train_model("conv1d", COSTMODEL_SMALL, tr,
+                         "valu_utilization", steps=120, batch_size=64,
+                         log_every=20)
+    losses = [l for _, l in res.history]
+    assert losses[-1] < losses[0]
+
+
+def test_normalization_roundtrip():
+    y = np.abs(np.random.default_rng(0).normal(size=100) * 50) + 1
+    n, stats = DS.normalize_targets(y)
+    back = DS.denormalize(n, stats)
+    np.testing.assert_allclose(back, y, rtol=1e-4)

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import augment as AUG
+from repro.core import tokenizer as TOK
+from repro.ir import analyzers, samplers
+from repro.ir.graph import Graph, Tensor
+from repro.launch import hlo_cost as HC
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def graphs(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    fam = draw(st.sampled_from(sorted(samplers.SAMPLERS)))
+    return samplers.sample_graph(np.random.default_rng(seed), fam)
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_sampled_graphs_always_valid(g):
+    g.validate()
+    assert len(g.values) == g.n_args + len(g.ops)
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_analyzer_targets_positive_and_finite(g):
+    res = analyzers.analyze(g)
+    for k, v in res.items():
+        assert np.isfinite(v) and v >= 0, k
+
+
+@given(graphs(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_reorder_is_semantic_invariant(g, seed):
+    """Topological reorder: same ops, same flops-derived targets; register
+    pressure may change (schedule-dependent) but stays within bounds."""
+    rng = np.random.default_rng(seed)
+    g2 = AUG.reorder_ops(g, rng)
+    g2.validate()
+    assert sorted(o.opcode for o in g2.ops) == \
+        sorted(o.opcode for o in g.ops)
+    assert analyzers.valu_utilization(g2) == analyzers.valu_utilization(g)
+    assert analyzers.latency_us(g2) == pytest.approx(analyzers.latency_us(g))
+    # pressure bounded by sum of all value units (trivial upper bound)
+    ub = sum(analyzers._vreg_units(t) for t in g.values)
+    assert 0 < analyzers.register_pressure(g2) <= ub
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_tokenizer_ops_subset_of_operands_mode(g):
+    ops = TOK.graph_tokens(g, "ops")
+    opnd = TOK.graph_tokens(g, "ops_operands")
+    # every opcode token appears in both modes, in the same order
+    o1 = [t for t in ops if t.startswith("xpu.")]
+    o2 = [t for t in opnd if t.startswith("xpu.")]
+    assert o1 == o2
+    assert len(opnd) >= len(ops)
+
+
+@given(graphs(), st.integers(4, 64))
+@settings(**SETTINGS)
+def test_encode_pads_and_truncates(g, max_len):
+    toks = TOK.graph_tokens(g, "ops")
+    v = TOK.fit_vocab([toks], max_size=4096)
+    ids = v.encode(toks, max_len)
+    assert ids.shape == (max_len,)
+    assert (ids[min(len(toks), max_len):] == v.token_to_id[TOK.PAD]).all()
+
+
+@given(st.lists(st.sampled_from(["a", "b", "c", "dd", "ee"]),
+                min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_vocab_fit_encode_no_oov_on_train_corpus(tokens):
+    v = TOK.fit_vocab([tokens], max_size=4096)
+    assert v.oov_rate(tokens) == 0.0
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_hlo_shape_bytes(a, b, c):
+    total, shapes = HC._shape_info(f"f32[{a},{b},{c}]{{2,1,0}}")
+    assert total == a * b * c * 4
+    total2, _ = HC._shape_info(f"(f32[{a}], bf16[{b},{c}])")
+    assert total2 == a * 4 + b * c * 2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_fusion_advisor_cost_ordering(seed):
+    """fuse_elementwise never increases op count; latency oracle agrees
+    fused <= unfused (fewer HBM round-trips in the analyzer's model)."""
+    from repro.core.service import fuse_elementwise
+    rng = np.random.default_rng(seed)
+    g = samplers.sample_graph(rng, "resnet")
+    f = fuse_elementwise(g)
+    f.validate()
+    assert len(f.ops) <= len(g.ops)

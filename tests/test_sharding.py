@@ -1,0 +1,92 @@
+"""Sharding resolver + distributed-runtime unit tests (small host meshes).
+
+Note: these tests must NOT set xla_force_host_platform_device_count (the
+dry-run owns that); they exercise the resolver logic against 1-device
+meshes, where every rule falls back to replication but the resolution
+logic (divisibility, axis reuse) is identical.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import ShardingRules
+
+
+class FakeMesh:
+    """Duck-typed mesh for resolver logic tests (no devices needed)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+def rules_for(shape=(16, 16), names=("data", "model"), overrides=None):
+    return ShardingRules.__new__(ShardingRules).__init__ if False else \
+        _mk(shape, names, overrides)
+
+
+def _mk(shape, names, overrides=None):
+    r = ShardingRules.__new__(ShardingRules)
+    r.mesh = FakeMesh(shape, names)
+    from repro.runtime.sharding import DEFAULT_RULES
+    r.rules = dict(DEFAULT_RULES)
+    if overrides:
+        for k, v in overrides.items():
+            r.rules[k] = (v,) if isinstance(v, str) else tuple(v or ())
+    r.axis_sizes = dict(zip(names, shape))
+    return r
+
+
+def test_divisible_dims_shard():
+    r = _mk((16, 16), ("data", "model"))
+    # wide-DP default: a 256 batch claims both axes; heads fall back
+    spec = r.spec(("batch", None, "heads", None), (256, 4096, 32, 128))
+    assert spec == P(("data", "model"), None, None, None)
+    # smaller batch leaves the model axis to the heads
+    spec2 = r.spec(("batch", None, "heads", None), (32, 4096, 32, 128))
+    assert spec2 == P("data", None, "model", None)
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    r = _mk((16, 16), ("data", "model"))
+    # 40 heads % 16 != 0 -> heads replicated (batch 32: data only)
+    spec = r.spec(("batch", "qseq", "heads", None), (32, 4096, 40, 128))
+    assert spec[2] is None
+    # qseq picks up the freed model axis (context parallelism)
+    assert spec[1] == "model"
+
+
+def test_axis_never_used_twice():
+    r = _mk((16, 16), ("data", "model"))
+    spec = r.spec(("heads", "ffn"), (32, 1024))  # both want 'model'
+    assert spec == P("model", None)
+
+
+def test_batch_composes_pod_and_data():
+    r = _mk((2, 16, 16), ("pod", "data", "model"))
+    spec = r.spec(("batch", None), (256, 8))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_batch_of_one_replicates():
+    r = _mk((2, 16, 16), ("pod", "data", "model"))
+    spec = r.spec(("batch", "cache_seq"), (1, 524288))
+    assert spec[0] is None
+    assert spec[1] == "model"
+
+
+def test_overrides():
+    r = _mk((16, 16), ("data", "model"),
+            overrides={"batch": ("data", "model")})
+    spec = r.spec(("batch", None), (256, 8))
+    assert spec == P(("data", "model"), None)
+
+
+def test_real_constrain_on_single_device():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    r = ShardingRules(mesh)
+    with mesh:
+        x = jax.jit(lambda v: r.constrain(v * 2, "batch", "embed"))(
+            jax.numpy.ones((4, 8)))
+    assert x.shape == (4, 8)
