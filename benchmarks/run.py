@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
   inference_speed   — §5 claim: Conv1D model is much faster than LSTM.
   kernel_bench      — fused Pallas tower vs unfused XLA reference: wall
                       time (CPU proxy) + modeled HBM-traffic reduction.
+  serve_bench       — unified multi-target service vs three single-target
+                      services on the same request stream (req/s).
   roofline_table    — reads experiments/dryrun/*.json into the §Roofline
                       table (derived = roofline fraction).
 
@@ -171,6 +173,64 @@ def roofline_table(full: bool = False, seed: int = 0,
     return rows
 
 
+# --------------------------------------------------------------- serve_bench
+def serve_bench(full: bool = False, seed: int = 0):
+    """Unified multi-target serving vs three single-target services.
+
+    Same conv1d encoder topology and identical request stream; only the
+    head layout differs. The unified service runs ONE encoder forward
+    pass per graph and reads all three targets off per-target heads;
+    the baseline runs the encoder once per (graph, target). Weights are
+    untrained — throughput does not depend on them."""
+    from repro.core import tokenizer as TOK
+    from repro.core.service import CostModelService
+    from repro.ir import samplers
+
+    n_req = 512 if full else 128
+    cfg = CostModelConfig(name="serve-bench", vocab_size=4096, max_seq=160,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    rng = np.random.default_rng(seed)
+    graphs = [samplers.sample_graph(rng) for _ in range(n_req)]
+    vocab = TOK.fit_vocab([TOK.graph_tokens(g, "ops") for g in graphs],
+                          max_size=4096)
+    heads = CM.DEFAULT_HEADS
+    stats1 = {"mu": 0.0, "sigma": 1.0}
+    key = jax.random.PRNGKey(seed)
+    unified = CostModelService(
+        "conv1d", cfg, CM.conv_init(key, cfg, heads=heads), vocab,
+        {t: stats1 for t in heads}, mode="ops", max_seq=160)
+    singles = [CostModelService(
+        "conv1d", cfg, CM.conv_init(key, cfg), vocab, stats1,
+        mode="ops", max_seq=160, target=t) for t in heads]
+
+    def run_unified():
+        unified._cache.clear()
+        unified.predict_all(graphs)
+
+    def run_singles():
+        for s in singles:
+            s._cache.clear()
+            s.predict_graphs(graphs)
+
+    iters = 10 if full else 5
+    out = {}
+    for name, fn in [("unified_multi_head", run_unified),
+                     ("three_single_head", run_singles)]:
+        fn()                           # warmup: trigger per-bucket JIT
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        req_s = n_req / (us / 1e6)
+        out[name] = req_s
+        _row(f"serve_bench/{name}", us,
+             f"req_s={req_s:.0f};targets={len(heads)}")
+    speedup = out["unified_multi_head"] / out["three_single_head"]
+    _row("serve_bench/speedup", 0.0, f"speedup={speedup:.2f}x")
+    return out
+
+
 # ------------------------------------------------- transformer_extension
 def transformer_extension(full: bool = False, seed: int = 0):
     """Beyond-paper: the paper's §6 future-work #1 (Transformer cost
@@ -203,6 +263,7 @@ BENCHES = {
     "operand_ablation": operand_ablation,
     "inference_speed": inference_speed,
     "kernel_bench": kernel_bench,
+    "serve_bench": serve_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,
 }

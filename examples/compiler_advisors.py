@@ -1,13 +1,64 @@
-"""Compiler-in-the-loop demo: the deployed cost model drives fusion,
-unroll, and recompile decisions (the paper's §1 motivation).
+"""Compiler-in-the-loop demo: ONE deployed multi-target cost model drives
+fusion, unroll, and recompile decisions (the paper's §1 motivation).
+
+Every advisor shares the same CostModelService: a single encoder forward
+pass per candidate graph yields register pressure, vALU utilization, and
+latency together, and the service's LRU cache is shared across advisors —
+a graph costed during fusion search is free during unroll search.
 
     PYTHONPATH=src python examples/compiler_advisors.py
 """
-import subprocess
-import sys
+import numpy as np
 
-# The serve driver is the real implementation; this example runs a short
-# end-to-end session through it.
-sys.exit(subprocess.call(
-    [sys.executable, "-m", "repro.launch.serve",
-     "--requests", "300", "--train-steps", "300", "--n-graphs", "900"]))
+from repro.configs.costmodel import CostModelConfig
+from repro.core import models as CM
+from repro.core import trainer as TR
+from repro.core.service import (CostModelService, FusionAdvisor,
+                                RecompileAdvisor, UnrollAdvisor)
+from repro.core import augment as AUG
+from repro.ir import dataset as DS, samplers
+
+
+def main(n_graphs=900, train_steps=300, seed=0):
+    cfg = CostModelConfig(name="advisors", vocab_size=4096, max_seq=160,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    ds = DS.build_dataset(n_graphs, mode="ops", max_seq=160,
+                          vocab_size=4096, augment_factor=2, seed=seed)
+    tr, te = ds.split(0.1)
+    print(f"training one model for all targets: {list(CM.DEFAULT_HEADS)}")
+    res = TR.train_model("conv1d", cfg, tr, CM.DEFAULT_HEADS,
+                         steps=train_steps, batch_size=128, lr=2e-3)
+    for t, m in TR.evaluate("conv1d", cfg, res, te).items():
+        print(f"  eval[{t}]: rmse_rel={m['rmse_rel_pct']:.1f}% "
+              f"mape={m['mape_pct']:.1f}%")
+
+    svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
+                           res.norm_stats, mode="ops", max_seq=160)
+    fusion = FusionAdvisor(svc)
+    unroll = UnrollAdvisor(svc, register_budget=64)
+    recompile = RecompileAdvisor(svc)
+
+    rng = np.random.default_rng(seed + 1)
+    g = samplers.sample_graph(rng, "resnet")
+    costs = svc.predict_all([g])
+    print("one forward pass, all characteristics:",
+          {t: round(float(v[0]), 2) for t, v in costs.items()})
+
+    do_fuse, c0, c1 = fusion.advise(g)
+    print(f"fusion advisor: fuse={do_fuse} "
+          f"(unfused={c0:.1f}us fused={c1:.1f}us)")
+    adv = unroll.advise(g)
+    print(f"unroll advisor: best_factor={adv['best_factor']} "
+          f"per-iter latency="
+          f"{ {k: round(v, 1) for k, v in adv['per_iter_latency'].items()} }")
+    g2 = AUG.jitter_shapes(g, rng)
+    dec = recompile.advise(g, g2)
+    print(f"recompile advisor: recompile={dec['recompile']} "
+          f"shift={dec['shift']:.1%}")
+    print(f"cache after session: {len(svc._cache)} entries "
+          f"(bound {svc.cache_size})")
+
+
+if __name__ == "__main__":
+    main()

@@ -91,12 +91,19 @@ def latest_steps(directory: str):
 
 
 def restore(directory: str, like, *, step: Optional[int] = None,
-            shardings=None, verify: bool = False
+            shardings=None, verify: bool = False,
+            check_treedef: bool = True
             ) -> Tuple[Any, int, Dict]:
     """Restore newest committed checkpoint into the structure of ``like``.
 
     shardings: optional pytree of NamedShardings (same structure) — enables
-    elastic re-shard onto the current mesh."""
+    elastic re-shard onto the current mesh.
+
+    check_treedef guards structure drift: leaves are matched by flatten
+    order, so restoring e.g. a single-head cost-model checkpoint into a
+    multi-head param tree (or a tree with renamed heads) must fail loudly
+    rather than silently permuting weights. Pass False only when the
+    treedef repr is known to differ benignly (e.g. across JAX versions)."""
     steps = latest_steps(directory)
     if step is not None:
         steps = [s for s in steps if s <= step]
@@ -107,9 +114,17 @@ def restore(directory: str, like, *, step: Optional[int] = None,
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     leaves_like, treedef = jax.tree.flatten(like)
-    assert len(leaves_like) == manifest["n_leaves"], \
-        f"checkpoint has {manifest['n_leaves']} leaves, model expects " \
-        f"{len(leaves_like)}"
+    if len(leaves_like) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, model expects "
+            f"{len(leaves_like)} — was the model reconfigured (e.g. "
+            f"single-head -> multi-head) since the checkpoint was saved?")
+    if check_treedef and manifest.get("treedef") not in (None, str(treedef)):
+        raise ValueError(
+            f"checkpoint tree structure differs from the model's:\n"
+            f"  ckpt:  {manifest['treedef']}\n"
+            f"  model: {treedef}\n"
+            f"(pass check_treedef=False to force order-based matching)")
     shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
         else [None] * len(leaves_like)
     out = []

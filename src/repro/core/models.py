@@ -5,19 +5,35 @@
 3. Conv1D+MaxPool+FC       — 6 stacked Conv1D (filter sizes per config),
                              MaxPool1D, 3 FC layers (best RMSE; Figs 5/6).
 
-All models share the embedding layer (dim 64 per the paper) and emit a
-scalar regression target. Params are plain dicts with matching ``*_axes``
-for the sharded 100M-scale driver.
+All models share the embedding layer (dim 64 per the paper) and are split
+into a shared ``encode(params, ids) -> features`` stage plus regression
+heads. Two head layouts exist:
+
+* **single-head** (legacy): the final linear layer predicts one scalar
+  target; ``apply(params, ids)`` returns a ``(B,)`` array. This is the
+  layout produced by ``*_init(key, cfg)`` with no ``heads`` argument and
+  is kept so existing single-target callers keep working.
+* **multi-head**: ``*_init(key, cfg, heads=("register_pressure", ...))``
+  replaces the final layer with a dict of per-target linear heads over the
+  shared features; ``apply(params, ids)`` returns
+  ``{target: (B,) array}``. One encoder pass serves every target.
+
+Params are plain dicts with matching ``*_axes`` (which accept the same
+``heads`` knob) for the sharded 100M-scale driver.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import _init
+
+# Canonical multi-target head set (every analyzer target, in analyzer order).
+DEFAULT_HEADS: Tuple[str, ...] = (
+    "register_pressure", "valu_utilization", "latency_us")
 
 
 # --------------------------------------------------------------- embedding
@@ -29,52 +45,126 @@ def _mask(ids):
     return (ids != 0).astype(jnp.float32)  # PAD id is 0
 
 
+# ------------------------------------------------------------------- heads
+def heads_init(key, feat_dim: int, heads: Sequence[str]) -> Dict[str, Any]:
+    """One linear head per target over shared ``feat_dim`` features."""
+    ks = jax.random.split(key, max(len(heads), 1))
+    return {t: {"w": _init(k, (feat_dim, 1)), "b": jnp.zeros((1,))}
+            for t, k in zip(heads, ks)}
+
+
+def heads_axes(heads: Sequence[str]):
+    return {t: {"w": (None, None), "b": (None,)} for t in heads}
+
+
+def scalar_head(head_p: Dict[str, Any], feats):
+    """The one {"w": (F, 1), "b": (1,)} linear-readout contract."""
+    return (feats @ head_p["w"] + head_p["b"])[..., 0]
+
+
+def apply_heads(heads_p: Dict[str, Any], feats) -> Dict[str, Any]:
+    return {t: scalar_head(h, feats) for t, h in heads_p.items()}
+
+
+def model_heads(params) -> Optional[Tuple[str, ...]]:
+    """Head names of a multi-head param tree, or None for single-head."""
+    if isinstance(params, dict) and "heads" in params:
+        return tuple(params["heads"])
+    return None
+
+
+def _finish(p, feats, single_head_fn):
+    """Dispatch features to the multi-head dict or the legacy scalar head."""
+    if "heads" in p:
+        return apply_heads(p["heads"], feats)
+    return single_head_fn(feats)
+
+
+def fc_stack(p, x):
+    """Hidden FC layers of an fc/conv param tree -> shared features.
+
+    Multi-head layout: every ``p["fc"]`` layer is hidden (relu'd).
+    Single-head layout: the last layer is the scalar head, so it is
+    excluded here and applied by :func:`fc_scalar_head`."""
+    hidden = p["fc"] if "heads" in p else p["fc"][:-1]
+    for layer in hidden:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    return x
+
+
+def fc_scalar_head(p, feats):
+    return scalar_head(p["fc"][-1], feats)
+
+
+def fc_finish(p, x):
+    """Pooled features -> fc_stack -> head outputs, for either layout
+    (shared by conv_apply and the fused-kernel tower in kernels/ops.py)."""
+    return _finish(p, fc_stack(p, x), lambda f: fc_scalar_head(p, f))
+
+
 # --------------------------------------------------------------- FC (BoT)
-def fc_init(key, cfg) -> Dict[str, Any]:
-    ks = jax.random.split(key, 4)
+def fc_init(key, cfg, heads: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
     p = {**embed_init(ks[0], cfg)}
-    dims = [cfg.embed_dim, *cfg.fc_dims, 1]
+    dims = [cfg.embed_dim, *cfg.fc_dims] + ([] if heads else [1])
     p["fc"] = [{"w": _init(ks[1 + i % 3], (dims[i], dims[i + 1])),
                 "b": jnp.zeros((dims[i + 1],))}
                for i in range(len(dims) - 1)]
+    if heads:
+        p["heads"] = heads_init(ks[4], cfg.fc_dims[-1], heads)
     return p
 
 
-def fc_axes(cfg):
-    return {"emb": ("vocab", "embed"),
-            "fc": [{"w": ("ffn", None) if i else ("embed", "ffn"),
-                    "b": (None,)} for i in range(len(cfg.fc_dims) + 1)]}
+def fc_axes(cfg, heads: Optional[Sequence[str]] = None):
+    n_fc = len(cfg.fc_dims) + (0 if heads else 1)
+    ax = {"emb": ("vocab", "embed"),
+          "fc": [{"w": ("ffn", None) if i else ("embed", "ffn"),
+                  "b": (None,)} for i in range(n_fc)]}
+    if heads:
+        ax["heads"] = heads_axes(heads)
+    return ax
 
 
-def fc_apply(p, ids):
+def fc_encode(p, ids):
+    """Bag-of-tokens pooling + the hidden FC stack -> shared features."""
     m = _mask(ids)
     x = p["emb"][ids] * m[..., None]
     x = x.sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)  # bag of tokens
-    for i, layer in enumerate(p["fc"]):
-        x = x @ layer["w"] + layer["b"]
-        if i < len(p["fc"]) - 1:
-            x = jax.nn.relu(x)
-    return x[..., 0]
+    return fc_stack(p, x)
+
+
+def fc_apply(p, ids):
+    return _finish(p, fc_encode(p, ids), lambda f: fc_scalar_head(p, f))
 
 
 # --------------------------------------------------------------- LSTM
-def lstm_init(key, cfg) -> Dict[str, Any]:
+def lstm_init(key, cfg,
+              heads: Optional[Sequence[str]] = None) -> Dict[str, Any]:
     ks = jax.random.split(key, 5)
     h = cfg.lstm_hidden
-    return {**embed_init(ks[0], cfg),
-            "wx": _init(ks[1], (cfg.embed_dim, 4 * h)),
-            "wh": _init(ks[2], (h, 4 * h)),
-            "b": jnp.zeros((4 * h,)),
-            "head": {"w": _init(ks[3], (h, 1)), "b": jnp.zeros((1,))}}
+    p = {**embed_init(ks[0], cfg),
+         "wx": _init(ks[1], (cfg.embed_dim, 4 * h)),
+         "wh": _init(ks[2], (h, 4 * h)),
+         "b": jnp.zeros((4 * h,))}
+    if heads:
+        p["heads"] = heads_init(ks[3], h, heads)
+    else:
+        p["head"] = {"w": _init(ks[3], (h, 1)), "b": jnp.zeros((1,))}
+    return p
 
 
-def lstm_axes(cfg):
-    return {"emb": ("vocab", "embed"), "wx": ("embed", "ffn"),
-            "wh": (None, "ffn"), "b": (None,),
-            "head": {"w": (None, None), "b": (None,)}}
+def lstm_axes(cfg, heads: Optional[Sequence[str]] = None):
+    ax = {"emb": ("vocab", "embed"), "wx": ("embed", "ffn"),
+          "wh": (None, "ffn"), "b": (None,)}
+    if heads:
+        ax["heads"] = heads_axes(heads)
+    else:
+        ax["head"] = {"w": (None, None), "b": (None,)}
+    return ax
 
 
-def lstm_apply(p, ids):
+def lstm_encode(p, ids):
+    """Masked LSTM scan -> final hidden state as shared features."""
     x = p["emb"][ids]                       # (B, S, E)
     m = _mask(ids)
     B = x.shape[0]
@@ -97,11 +187,17 @@ def lstm_apply(p, ids):
     h0 = jnp.zeros((B, h_dim))
     (h, _), _ = jax.lax.scan(step, (h0, h0),
                              (xw.transpose(1, 0, 2), m.T))
-    return (h @ p["head"]["w"] + p["head"]["b"])[..., 0]
+    return h
+
+
+def lstm_apply(p, ids):
+    return _finish(p, lstm_encode(p, ids),
+                   lambda f: scalar_head(p["head"], f))
 
 
 # ------------------------------------------------- Conv1D + MaxPool + FC
-def conv_init(key, cfg) -> Dict[str, Any]:
+def conv_init(key, cfg,
+              heads: Optional[Sequence[str]] = None) -> Dict[str, Any]:
     ks = jax.random.split(key, 2 + cfg.n_conv + 3)
     p = {**embed_init(ks[0], cfg), "convs": []}
     c_in = cfg.embed_dim
@@ -111,19 +207,25 @@ def conv_init(key, cfg) -> Dict[str, Any]:
                        scale=1.0 / np.sqrt(fs * c_in)),
             "b": jnp.zeros((c_out,))})
         c_in = c_out
-    dims = [c_in, *cfg.fc_dims, 1]
+    dims = [c_in, *cfg.fc_dims] + ([] if heads else [1])
     p["fc"] = [{"w": _init(ks[1 + cfg.n_conv + i], (dims[i], dims[i + 1])),
                 "b": jnp.zeros((dims[i + 1],))}
                for i in range(len(dims) - 1)]
+    if heads:
+        p["heads"] = heads_init(ks[-1], cfg.fc_dims[-1], heads)
     return p
 
 
-def conv_axes(cfg):
-    return {"emb": ("vocab", "embed"),
-            "convs": [{"w": (None, None, "ffn"), "b": ("ffn",)}
-                      for _ in range(cfg.n_conv)],
-            "fc": [{"w": ("ffn", None), "b": (None,)}
-                   for _ in range(len(cfg.fc_dims) + 1)]}
+def conv_axes(cfg, heads: Optional[Sequence[str]] = None):
+    n_fc = len(cfg.fc_dims) + (0 if heads else 1)
+    ax = {"emb": ("vocab", "embed"),
+          "convs": [{"w": (None, None, "ffn"), "b": ("ffn",)}
+                    for _ in range(cfg.n_conv)],
+          "fc": [{"w": ("ffn", None), "b": (None,)}
+                 for _ in range(n_fc)]}
+    if heads:
+        ax["heads"] = heads_axes(heads)
+    return ax
 
 
 def conv1d(x, w, b):
@@ -136,23 +238,28 @@ def conv1d(x, w, b):
     return out + b
 
 
-def conv_apply(p, ids, *, pooled_feats: bool = False):
+def conv_encode(p, ids, *, pooled_only: bool = False):
+    """Conv tower + MaxPool (+ hidden FC stack) -> shared features.
+
+    ``pooled_only`` stops after the max-pool (the kernel module's seam)."""
     x = p["emb"][ids] * _mask(ids)[..., None]   # (B, S, E)
     for layer in p["convs"]:
         x = jax.nn.relu(conv1d(x, layer["w"], layer["b"]))
     x = x.max(axis=1)                            # MaxPool1D over sequence
-    feats = x
-    for i, layer in enumerate(p["fc"]):
-        x = x @ layer["w"] + layer["b"]
-        if i < len(p["fc"]) - 1:
-            x = jax.nn.relu(x)
-    return (x[..., 0], feats) if pooled_feats else x[..., 0]
+    return x if pooled_only else fc_stack(p, x)
+
+
+def conv_apply(p, ids, *, pooled_feats: bool = False):
+    pooled = conv_encode(p, ids, pooled_only=True)
+    out = fc_finish(p, pooled)
+    return (out, pooled) if pooled_feats else out
 
 
 # ------------------------------------------------- Transformer (beyond-paper)
 # The paper's §6 future work #1: "Use more powerful models like
 # Transformers to better the currently achieved accuracy figures".
-def xformer_init(key, cfg, n_layers=2, n_heads=4) -> Dict[str, Any]:
+def xformer_init(key, cfg, n_layers=2, n_heads=4,
+                 heads: Optional[Sequence[str]] = None) -> Dict[str, Any]:
     d = cfg.embed_dim
     ks = jax.random.split(key, 2 + 5 * n_layers)
     p = {**embed_init(ks[0], cfg),
@@ -167,17 +274,24 @@ def xformer_init(key, cfg, n_layers=2, n_heads=4) -> Dict[str, Any]:
             "w1": _init(ks[o + 2], (d, 4 * d)),
             "w2": _init(ks[o + 3], (4 * d, d)),
         })
-    p["head"] = {"w": _init(ks[-1], (d, 1)), "b": jnp.zeros((1,))}
+    if heads:
+        p["heads"] = heads_init(ks[-1], d, heads)
+    else:
+        p["head"] = {"w": _init(ks[-1], (d, 1)), "b": jnp.zeros((1,))}
     return p
 
 
-def xformer_axes(cfg):
+def xformer_axes(cfg, heads: Optional[Sequence[str]] = None):
     blk = {"wqkv": ("embed", "ffn"), "wo": (None, "embed"),
            "ln1": (None,), "ln2": (None,),
            "w1": ("embed", "ffn"), "w2": ("ffn", "embed")}
-    return {"emb": ("vocab", "embed"), "pos": (None, "embed"),
-            "blocks": [blk, blk],
-            "head": {"w": (None, None), "b": (None,)}}
+    ax = {"emb": ("vocab", "embed"), "pos": (None, "embed"),
+          "blocks": [blk, blk]}
+    if heads:
+        ax["heads"] = heads_axes(heads)
+    else:
+        ax["head"] = {"w": (None, None), "b": (None,)}
+    return ax
 
 
 def _ln(x, g):
@@ -186,7 +300,8 @@ def _ln(x, g):
     return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
 
 
-def xformer_apply(p, ids):
+def xformer_encode(p, ids):
+    """Masked transformer stack -> mean-pooled features."""
     m = _mask(ids)
     B, S = ids.shape
     d = p["emb"].shape[1]
@@ -207,9 +322,13 @@ def xformer_apply(p, ids):
         h = h + o.reshape(B, S, d) @ blk["wo"]
         x = _ln(h, blk["ln2"])
         h = h + jax.nn.gelu(x @ blk["w1"]) @ blk["w2"]
-    pooled = (h * m[..., None]).sum(1) / jnp.maximum(
+    return (h * m[..., None]).sum(1) / jnp.maximum(
         m.sum(1, keepdims=True), 1.0)
-    return (pooled @ p["head"]["w"] + p["head"]["b"])[..., 0]
+
+
+def xformer_apply(p, ids):
+    return _finish(p, xformer_encode(p, ids),
+                   lambda f: scalar_head(p["head"], f))
 
 
 MODELS = {
@@ -219,8 +338,21 @@ MODELS = {
     "xformer": (xformer_init, xformer_apply, xformer_axes),
 }
 
+ENCODERS = {
+    "fc": fc_encode,
+    "lstm": lstm_encode,
+    "conv1d": conv_encode,
+    "xformer": xformer_encode,
+}
+
 
 def get_model(kind: str):
     if kind not in MODELS:
         raise KeyError(f"unknown model {kind!r}; one of {sorted(MODELS)}")
     return MODELS[kind]
+
+
+def get_encoder(kind: str):
+    if kind not in ENCODERS:
+        raise KeyError(f"unknown model {kind!r}; one of {sorted(ENCODERS)}")
+    return ENCODERS[kind]

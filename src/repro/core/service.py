@@ -3,30 +3,51 @@
 The paper's end state: "Deploy the model which the DL-compiler can invoke
 while compiling in order to make the best decisions." This module provides:
 
-* batched, cached inference over MLIR graphs/text;
+* batched, cached inference over MLIR graphs/text. One service predicts
+  **all** trained targets (register pressure, vALU utilization, latency)
+  from a single encoder forward pass when built from a multi-head model;
+  single-head models keep working through the same API.
+* sequence-length bucketing: each graph is padded to the smallest
+  power-of-two bucket that fits it (not the global ``max_seq``), so short
+  graphs stop paying full-length encoder cost. Every model family masks
+  padding, so bucketed predictions equal unbucketed ones.
+* a bounded LRU prediction cache (per-target vectors keyed by content
+  hash) so a long-running compiler session can't grow memory without
+  limit.
 * three compiler advisors built on top of it:
   - FusionAdvisor:    fuse A->B if predicted cost(fused) < cost(A)+cost(B)
   - UnrollAdvisor:    pick unroll factor in {1,2,4,8} minimizing predicted
                       latency while register pressure stays under budget
+                      (both targets from ONE service, one forward pass)
   - RecompileAdvisor: given new tensor shapes, reuse compiled code if the
                       predicted characteristic shift is below a threshold
                       (the paper's dynamic-runtime recompile decision).
 """
 from __future__ import annotations
 
-import copy
 import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import models as CM
 from repro.core import tokenizer as TOK
 from repro.ir import dataset as DS
-from repro.ir.graph import Graph, Tensor
+from repro.ir.graph import Graph
+
+
+def default_buckets(max_seq: int, min_bucket: int = 32) -> Tuple[int, ...]:
+    """Power-of-two sequence-length buckets up to (and including) max_seq."""
+    out = []
+    b = min_bucket
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(out)
 
 
 @dataclass
@@ -35,44 +56,141 @@ class CostModelService:
     cfg: object
     params: object
     vocab: TOK.Vocab
-    norm_stats: Dict[str, float]
+    # single-head: {"mu", "sigma"}; multi-head: {target: {"mu", "sigma"}}
+    norm_stats: Dict[str, Any]
     mode: str = "ops"
     max_seq: int = 256
     max_batch: int = 256
-    _cache: Dict[str, float] = field(default_factory=dict)
+    # name of the single-head model's target (cosmetic for predict_all keys)
+    target: Optional[str] = None
+    cache_size: int = 4096
+    buckets: Optional[Tuple[int, ...]] = None   # None -> power-of-two ladder
+    # content-hash -> (n_heads,) normalized prediction vector, LRU-ordered
+    _cache: "OrderedDict[str, np.ndarray]" = field(
+        default_factory=OrderedDict)
     _apply = None
 
     def __post_init__(self):
         _, apply_fn, _ = CM.get_model(self.kind)
         self._apply = jax.jit(apply_fn)
+        self.heads = CM.model_heads(self.params) or (
+            self.target or "prediction",)
+        self._multi = CM.model_heads(self.params) is not None
+        if self.buckets is None:
+            self.buckets = default_buckets(self.max_seq)
+        self.buckets = tuple(sorted(b for b in self.buckets
+                                    if b <= self.max_seq)) or (self.max_seq,)
+        # Conv towers propagate boundary conditions inward by sum(fs//2)
+        # positions per side (the tower's right-edge "cone"). Keeping
+        # 2x that as pad slack leaves an interior run of constant pad
+        # activations between the last real token's cone and the bucket
+        # edge's cone, which makes bucketed predictions exactly match
+        # full-length padding. The other families mask padding
+        # position-wise, so 0 slack is enough.
+        self._pad_slack = (2 * sum(fs // 2 for fs in self.cfg.conv_filters)
+                           if self.kind == "conv1d" else 0)
 
-    # ------------------------------------------------------------- inference
+    # ------------------------------------------------------------- encoding
+    def _bucket_len(self, n_tokens: int) -> int:
+        for b in self.buckets:
+            if n_tokens + self._pad_slack <= b:
+                return b
+        return self.buckets[-1]
+
     def _encode(self, g: Graph) -> np.ndarray:
-        return self.vocab.encode(TOK.graph_tokens(g, self.mode), self.max_seq)
+        """Token ids padded to the graph's bucket, not the global max_seq."""
+        toks = TOK.graph_tokens(g, self.mode)
+        return self.vocab.encode(toks, self._bucket_len(len(toks)))
 
-    def predict_graphs(self, graphs: Sequence[Graph]) -> np.ndarray:
-        """Batched prediction with content-hash caching."""
-        keys, missing, enc = [], [], []
+    def _stats_for(self, t: str) -> Dict[str, float]:
+        return self.norm_stats[t] if self._multi else self.norm_stats
+
+    # ------------------------------------------------------------ inference
+    def _cache_get(self, h: str) -> Optional[np.ndarray]:
+        v = self._cache.get(h)
+        if v is not None:
+            self._cache.move_to_end(h)
+        return v
+
+    def _cache_put(self, h: str, v: np.ndarray) -> None:
+        self._cache[h] = v
+        self._cache.move_to_end(h)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def _forward(self, ids: np.ndarray) -> np.ndarray:
+        """One batched forward pass -> (B, n_heads) normalized predictions."""
+        out = self._apply(self.params, ids)
+        if self._multi:
+            out = jax.device_get(out)
+            return np.stack([np.asarray(out[t]) for t in self.heads], axis=1)
+        return np.asarray(out)[:, None]
+
+    def predict_all(self, graphs: Sequence[Graph]) -> Dict[str, np.ndarray]:
+        """All targets for every graph from one cached, batched, bucketed
+        forward pass. Returns {target: (len(graphs),) denormalized array}."""
+        if not graphs:
+            return {t: np.zeros((0,), np.float32) for t in self.heads}
+        keys: List[str] = []
+        vals: Dict[str, np.ndarray] = {}   # this call's working set: the
+        missing: Dict[str, np.ndarray] = {}  # LRU may evict entries mid-call
         for g in graphs:
             ids = self._encode(g)
             h = hashlib.sha1(ids.tobytes()).hexdigest()
             keys.append(h)
-            if h not in self._cache:
-                missing.append(h)
-                enc.append(ids)
-        if enc:
-            ids = np.stack(enc)
-            preds = []
-            for i in range(0, len(ids), self.max_batch):
-                preds.append(np.asarray(
-                    self._apply(self.params, jnp.asarray(ids[i:i + self.max_batch]))))
-            for h, p in zip(missing, np.concatenate(preds)):
-                self._cache[h] = float(p)
-        raw = np.array([self._cache[k] for k in keys])
-        return DS.denormalize(raw, self.norm_stats)
+            if h in vals or h in missing:
+                continue
+            hit = self._cache_get(h)
+            if hit is not None:
+                vals[h] = hit
+            else:
+                missing[h] = ids
+        if missing:
+            # group by bucket length: one jitted program per bucket
+            by_len: Dict[int, List[Tuple[str, np.ndarray]]] = {}
+            for h, ids in missing.items():
+                by_len.setdefault(len(ids), []).append((h, ids))
+            for _, group in sorted(by_len.items()):
+                hs = [h for h, _ in group]
+                ids = np.stack([i for _, i in group])
+                for i in range(0, len(ids), self.max_batch):
+                    chunk = ids[i:i + self.max_batch]
+                    preds = self._forward(chunk)
+                    for hh, p in zip(hs[i:i + self.max_batch], preds):
+                        vals[hh] = p
+                        self._cache_put(hh, p)
+        raw = np.stack([vals[k] for k in keys])  # (N, n_heads)
+        return {t: DS.denormalize(raw[:, i], self._stats_for(t))
+                for i, t in enumerate(self.heads)}
 
-    def predict(self, g: Graph) -> float:
-        return float(self.predict_graphs([g])[0])
+    def resolve_target(self, target: Optional[str]) -> str:
+        """Map a requested target onto this service's heads.
+
+        A single-head service answers ``target=None`` with its only head;
+        it also answers a *mismatched* name only when its own target name
+        is unknown (legacy unnamed construction) — a service that knows
+        it predicts latency must not pass its output off as register
+        pressure."""
+        if target in self.heads:
+            return target
+        if len(self.heads) == 1 and (
+                target is None or self._multi is False and self.target is None):
+            return self.heads[0]
+        if target is None:
+            raise ValueError(
+                f"multi-target service needs an explicit target; "
+                f"one of {list(self.heads)}")
+        raise KeyError(
+            f"target {target!r} not served; heads={list(self.heads)}")
+
+    def predict_graphs(self, graphs: Sequence[Graph],
+                       target: Optional[str] = None) -> np.ndarray:
+        """Batched prediction of one target (all targets are computed and
+        cached regardless — asking for the others later is free)."""
+        return self.predict_all(graphs)[self.resolve_target(target)]
+
+    def predict(self, g: Graph, target: Optional[str] = None) -> float:
+        return float(self.predict_graphs([g], target)[0])
 
 
 # --------------------------------------------------------------- advisors
@@ -114,10 +232,12 @@ def fuse_elementwise(g: Graph) -> Graph:
 @dataclass
 class FusionAdvisor:
     service: CostModelService
+    target: str = "latency_us"
 
     def advise(self, g: Graph) -> Tuple[bool, float, float]:
         fused = fuse_elementwise(g)
-        c0, c1 = self.service.predict_graphs([g, fused])
+        t = self.service.resolve_target(self.target)
+        c0, c1 = self.service.predict_graphs([g, fused], t)
         return bool(c1 < c0), float(c0), float(c1)
 
 
@@ -143,14 +263,27 @@ def unroll_graph(g: Graph, factor: int) -> Graph:
 
 @dataclass
 class UnrollAdvisor:
-    latency_service: CostModelService
-    regpressure_service: CostModelService
+    """Unroll-factor search over ONE multi-target service: latency and
+    register pressure come out of the same forward pass per candidate."""
+    service: CostModelService
     register_budget: float = 64.0
+    latency_target: str = "latency_us"
+    pressure_target: str = "register_pressure"
 
     def advise(self, g: Graph, factors=(1, 2, 4, 8)) -> Dict:
+        lat_t = self.service.resolve_target(self.latency_target)
+        reg_t = self.service.resolve_target(self.pressure_target)
+        if lat_t == reg_t:
+            # a single-head service would silently judge register-budget
+            # feasibility on latency numbers — refuse instead
+            raise ValueError(
+                f"UnrollAdvisor needs a service with distinct "
+                f"{self.latency_target!r} and {self.pressure_target!r} "
+                f"heads; got heads={list(self.service.heads)}")
         cands = {f: unroll_graph(g, f) for f in factors}
-        lat = self.latency_service.predict_graphs(list(cands.values()))
-        reg = self.regpressure_service.predict_graphs(list(cands.values()))
+        preds = self.service.predict_all(list(cands.values()))
+        lat = preds[lat_t]
+        reg = preds[reg_t]
         per_iter = {f: lat[i] / f for i, f in enumerate(cands)}
         feasible = [f for i, f in enumerate(cands)
                     if reg[i] <= self.register_budget]
@@ -168,10 +301,12 @@ class RecompileAdvisor:
     (expensive) worth it?"""
     service: CostModelService
     threshold: float = 0.15   # recompile if predicted cost shifts > 15%
+    target: str = "latency_us"
 
     def advise(self, compiled_graph: Graph, new_graph: Graph) -> Dict:
+        t = self.service.resolve_target(self.target)
         c_old, c_new = self.service.predict_graphs(
-            [compiled_graph, new_graph])
+            [compiled_graph, new_graph], t)
         shift = abs(c_new - c_old) / max(abs(c_old), 1e-9)
         return {"recompile": bool(shift > self.threshold),
                 "predicted_old": float(c_old),

@@ -29,7 +29,6 @@ from repro.ir.graph import Graph
 PAD, UNK, BOS, EOS, SEP = "<pad>", "<unk>", "<bos>", "<eos>", "<sep>"
 SPECIALS = [PAD, UNK, BOS, EOS, SEP]
 
-_SHAPE_RE = re.compile(r"^\d+(x\d+)*x?(f32|bf16|f16|i8|i32)$")
 _TEXT_TOKEN_RE = re.compile(
     r"%[A-Za-z0-9_]+|\"[a-z_]+\.[a-z0-9_.]+\"|[a-z_]+\.[a-z0-9_.]+"
     r"|tensor<[^>]*>|\d+x[0-9x]*(?:f32|bf16|f16|i8|i32)|[A-Za-z_][A-Za-z0-9_]*")

@@ -4,12 +4,18 @@ Small configs train single-device; the 100M driver trains data-parallel
 under a mesh with optional int8 error-feedback gradient compression
 (:mod:`repro.optim.compress`). Metrics match the paper: relative RMSE
 ("5-7% range") and %-exact for register pressure (Fig. 6: ~75% exact).
+
+``target`` may be a single name (legacy scalar head) or a sequence of
+names, which trains one shared encoder with a per-target head dict under
+a joint MSE (mean of per-target MSEs in normalized space). Multi-target
+results carry per-target ``norm_stats`` and ``evaluate`` reports metrics
+per target.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +25,17 @@ from repro.core import models as CM
 from repro.ir import dataset as DS
 from repro.optim import adamw
 
+TargetSpec = Union[str, Sequence[str]]
+
 
 @dataclass
 class TrainResult:
     params: Any
     stats: Dict[str, float]
     history: list = field(default_factory=list)
-    norm_stats: Dict[str, float] = field(default_factory=dict)
+    # single-target: {"mu": ..., "sigma": ...}; multi-target: {target: {...}}
+    norm_stats: Dict[str, Any] = field(default_factory=dict)
+    heads: Optional[Tuple[str, ...]] = None
 
 
 def _batches(rng, n, batch_size):
@@ -34,10 +44,22 @@ def _batches(rng, n, batch_size):
         yield perm[i:i + batch_size]
 
 
-def make_sgd_step(apply_fn, opt_cfg, grad_transform=None):
+def make_loss_fn(apply_fn, heads: Optional[Tuple[str, ...]] = None):
+    """MSE loss. With ``heads``, ``y`` is (B, n_heads) column-per-target
+    and the loss is the mean of per-target MSEs (joint training)."""
     def loss_fn(params, ids, y):
         pred = apply_fn(params, ids)
+        if heads:
+            per = [jnp.mean(jnp.square(pred[t] - y[:, i]))
+                   for i, t in enumerate(heads)]
+            return jnp.mean(jnp.stack(per))
         return jnp.mean(jnp.square(pred - y))
+    return loss_fn
+
+
+def make_sgd_step(apply_fn, opt_cfg, grad_transform=None,
+                  heads: Optional[Tuple[str, ...]] = None):
+    loss_fn = make_loss_fn(apply_fn, heads)
 
     def step(params, opt_state, ids, y):
         loss, grads = jax.value_and_grad(loss_fn)(params, ids, y)
@@ -49,19 +71,24 @@ def make_sgd_step(apply_fn, opt_cfg, grad_transform=None):
     return step
 
 
-def train_model(kind: str, cfg, train: DS.CostDataset, target: str,
+def train_model(kind: str, cfg, train: DS.CostDataset, target: TargetSpec,
                 *, steps: int = 300, batch_size: int = 64,
                 lr: float = 1e-3, seed: int = 0,
                 jit_step=None, log_every: int = 100,
                 verbose: bool = False) -> TrainResult:
+    heads = None if isinstance(target, str) else tuple(target)
     init_fn, apply_fn, _ = CM.get_model(kind)
     key = jax.random.PRNGKey(seed)
-    params = init_fn(key, cfg)
-    y_raw = train.targets[target]
-    y, norm_stats = DS.normalize_targets(y_raw)
+    if heads:
+        params = init_fn(key, cfg, heads=heads)
+        y, norm_stats = DS.stacked_normalized_targets(train.targets, heads)
+    else:
+        params = init_fn(key, cfg)
+        y, norm_stats = DS.normalize_targets(train.targets[target])
     opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=min(50, steps // 10),
                                 total_steps=steps, weight_decay=0.01)
-    step_fn = jit_step or jax.jit(make_sgd_step(apply_fn, opt_cfg))
+    step_fn = jit_step or jax.jit(make_sgd_step(apply_fn, opt_cfg,
+                                                heads=heads))
     opt_state = adamw.init_state(params)
     rng = np.random.default_rng(seed)
     history = []
@@ -81,25 +108,16 @@ def train_model(kind: str, cfg, train: DS.CostDataset, target: str,
             if it >= steps:
                 break
     return TrainResult(params=params, stats={}, history=history,
-                       norm_stats=norm_stats)
+                       norm_stats=norm_stats, heads=heads)
 
 
-def evaluate(kind: str, cfg, result: TrainResult, test: DS.CostDataset,
-             target: str, batch_size: int = 256) -> Dict[str, float]:
+def _target_metrics(pred_n: np.ndarray, true: np.ndarray,
+                    stats: Dict[str, float]) -> Dict[str, float]:
     """Paper metrics: relative RMSE (%), normalized RMSE, %-exact (rounded)."""
-    _, apply_fn, _ = CM.get_model(kind)
-    apply_j = jax.jit(apply_fn)
-    preds = []
-    for i in range(0, len(test.ids), batch_size):
-        ids = jnp.asarray(test.ids[i:i + batch_size])
-        preds.append(np.asarray(apply_j(result.params, ids)))
-    pred_n = np.concatenate(preds)
-    pred = DS.denormalize(pred_n, result.norm_stats)
-    true = test.targets[target]
+    pred = DS.denormalize(pred_n, stats)
     rel = (pred - true) / np.maximum(np.abs(true), 1e-6)
     # normalized-space RMSE against the train normalization
-    true_n = (np.log1p(true) - result.norm_stats["mu"]) / \
-        result.norm_stats["sigma"]
+    true_n = (np.log1p(true) - stats["mu"]) / stats["sigma"]
     return {
         "rmse_rel_pct": float(np.sqrt(np.mean(np.square(rel))) * 100),
         "mape_pct": float(np.mean(np.abs(rel)) * 100),
@@ -107,3 +125,35 @@ def evaluate(kind: str, cfg, result: TrainResult, test: DS.CostDataset,
         "exact_pct": float(np.mean(np.round(pred) == np.round(true)) * 100),
         "within5_pct": float(np.mean(np.abs(rel) <= 0.05) * 100),
     }
+
+
+def evaluate(kind: str, cfg, result: TrainResult, test: DS.CostDataset,
+             target: Optional[TargetSpec] = None, batch_size: int = 256
+             ) -> Dict[str, Any]:
+    """Evaluate a TrainResult.
+
+    Single-head result + target name -> flat metrics dict (legacy).
+    Multi-head result -> {target: metrics} for every requested target
+    (default: all heads); passing a single name returns that head's flat
+    metrics dict.
+    """
+    _, apply_fn, _ = CM.get_model(kind)
+    apply_j = jax.jit(apply_fn)
+    preds = []
+    for i in range(0, len(test.ids), batch_size):
+        ids = jnp.asarray(test.ids[i:i + batch_size])
+        preds.append(jax.device_get(apply_j(result.params, ids)))
+    if result.heads:
+        pred_n = {t: np.concatenate([np.asarray(p[t]) for p in preds])
+                  for t in result.heads}
+        if isinstance(target, str):
+            return _target_metrics(pred_n[target], test.targets[target],
+                                   result.norm_stats[target])
+        wanted = tuple(target) if target is not None else result.heads
+        return {t: _target_metrics(pred_n[t], test.targets[t],
+                                   result.norm_stats[t])
+                for t in wanted}
+    if not isinstance(target, str):
+        raise ValueError("single-head evaluate needs a target name")
+    pred_n = np.concatenate([np.asarray(p) for p in preds])
+    return _target_metrics(pred_n, test.targets[target], result.norm_stats)

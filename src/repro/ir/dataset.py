@@ -117,3 +117,25 @@ def normalize_targets(y: np.ndarray) -> Tuple[np.ndarray, Dict[str, float]]:
 
 def denormalize(pred: np.ndarray, stats: Dict[str, float]) -> np.ndarray:
     return np.expm1(pred * stats["sigma"] + stats["mu"])
+
+
+def normalize_targets_multi(
+        targets: Dict[str, np.ndarray], heads: Tuple[str, ...]
+) -> Tuple[Dict[str, np.ndarray], Dict[str, Dict[str, float]]]:
+    """Per-target normalize_targets; stats keyed by target name."""
+    ys, stats = {}, {}
+    for t in heads:
+        ys[t], stats[t] = normalize_targets(targets[t])
+    return ys, stats
+
+
+def stacked_normalized_targets(
+        targets: Dict[str, np.ndarray], heads: Tuple[str, ...]
+) -> Tuple[np.ndarray, Dict[str, Dict[str, float]]]:
+    """Multi-target labels as one (N, len(heads)) float32 array.
+
+    Column i is heads[i] — the contract the joint loss's ``y[:, i]``
+    indexing consumes (the single place this ordering is encoded)."""
+    ys, stats = normalize_targets_multi(targets, heads)
+    y = np.stack([ys[t] for t in heads], axis=1).astype(np.float32)
+    return y, stats

@@ -27,6 +27,8 @@ def lower_fn(fn: Callable, *args) -> Tuple[str, Dict[str, float]]:
     text = lowered.as_text()
     compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # newer jax: one dict per device
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_ = float(ca.get("bytes accessed", 0.0))
     targets = {

@@ -12,6 +12,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.models import fc_finish
 from repro.kernels.conv1d_stack import conv1d_stack_fused
 from repro.kernels import ref as REF
 
@@ -39,8 +40,4 @@ def conv_tower_apply(params, ids, *, use_kernel: bool = True,
         h = conv1d_stack(x, weights, biases, mask, interpret=interpret)
     else:
         h = REF.conv1d_stack_ref(x, weights, biases, mask)
-    for i, layer in enumerate(params["fc"]):
-        h = h @ layer["w"] + layer["b"]
-        if i < len(params["fc"]) - 1:
-            h = jax.nn.relu(h)
-    return h[..., 0]
+    return fc_finish(params, h)

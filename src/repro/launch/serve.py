@@ -2,7 +2,10 @@
 
 Simulates the DL-compiler's usage pattern: bursts of small prediction
 requests (one per candidate transformation) that the service batches,
-caches, and answers. Prints throughput and cache statistics.
+buckets by sequence length, caches (bounded LRU), and answers. One
+multi-head service predicts every hardware characteristic — register
+pressure, vALU utilization, latency — from a single encoder forward
+pass. Prints throughput and cache statistics.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 2000
 """
@@ -11,10 +14,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs.costmodel import COSTMODEL_BASE, CostModelConfig
+from repro.configs.costmodel import CostModelConfig
 from repro.core import models as CM
 from repro.core import trainer as TR
 from repro.core.service import (CostModelService, FusionAdvisor,
@@ -28,6 +30,7 @@ def main():
     ap.add_argument("--requests", type=int, default=500)
     ap.add_argument("--train-steps", type=int, default=400)
     ap.add_argument("--n-graphs", type=int, default=1500)
+    ap.add_argument("--cache-size", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,16 +40,16 @@ def main():
     ds = DS.build_dataset(args.n_graphs, mode="ops", max_seq=160,
                           vocab_size=4096, augment_factor=2, seed=args.seed)
     tr, te = ds.split(0.1)
-    print("training latency cost model for the service...")
-    res_lat = TR.train_model("conv1d", cfg, tr, "latency_us",
-                             steps=args.train_steps, batch_size=128, lr=2e-3)
-    res_reg = TR.train_model("conv1d", cfg, tr, "register_pressure",
-                             steps=args.train_steps, batch_size=128, lr=2e-3)
+    print(f"training joint multi-target cost model "
+          f"({', '.join(CM.DEFAULT_HEADS)})...")
+    res = TR.train_model("conv1d", cfg, tr, CM.DEFAULT_HEADS,
+                         steps=args.train_steps, batch_size=128, lr=2e-3)
 
-    lat_svc = CostModelService("conv1d", cfg, res_lat.params, ds.vocab,
-                               res_lat.norm_stats, mode="ops", max_seq=160)
-    reg_svc = CostModelService("conv1d", cfg, res_reg.params, ds.vocab,
-                               res_reg.norm_stats, mode="ops", max_seq=160)
+    svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
+                           res.norm_stats, mode="ops", max_seq=160,
+                           cache_size=args.cache_size)
+    print(f"service heads={list(svc.heads)} buckets={list(svc.buckets)} "
+          f"cache_bound={svc.cache_size}")
 
     rng = np.random.default_rng(args.seed + 1)
     graphs = [samplers.sample_graph(rng) for _ in range(args.requests // 2)]
@@ -55,17 +58,20 @@ def main():
     rng.shuffle(graphs)
 
     t0 = time.time()
-    preds = lat_svc.predict_graphs(graphs)
+    preds = svc.predict_all(graphs)
     dt = time.time() - t0
-    print(f"served {len(graphs)} requests in {dt:.2f}s "
-          f"({len(graphs)/dt:.0f} req/s, "
-          f"cache={len(lat_svc._cache)} unique)")
-    print(f"predicted latency: p50={np.median(preds):.1f}us "
-          f"max={preds.max():.1f}us")
+    n_targets = len(svc.heads)
+    print(f"served {len(graphs)} requests x {n_targets} targets in "
+          f"{dt:.2f}s ({len(graphs)/dt:.0f} req/s, "
+          f"{len(graphs)*n_targets/dt:.0f} predictions/s, "
+          f"cache={len(svc._cache)} unique)")
+    lat = preds["latency_us"]
+    print(f"predicted latency: p50={np.median(lat):.1f}us "
+          f"max={lat.max():.1f}us")
 
-    fusion = FusionAdvisor(lat_svc)
-    unroll = UnrollAdvisor(lat_svc, reg_svc, register_budget=64)
-    recompile = RecompileAdvisor(lat_svc)
+    fusion = FusionAdvisor(svc)
+    unroll = UnrollAdvisor(svc, register_budget=64)
+    recompile = RecompileAdvisor(svc)
 
     g = samplers.sample_graph(rng, "resnet")
     do_fuse, c0, c1 = fusion.advise(g)

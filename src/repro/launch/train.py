@@ -55,7 +55,9 @@ def main():
     ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
     ap.add_argument("--model", default="conv1d",
                     choices=sorted(CM.MODELS))
-    ap.add_argument("--target", default="register_pressure")
+    ap.add_argument("--target", default="register_pressure",
+                    help="target name, comma-separated list for a joint "
+                         "multi-head model, or 'all'")
     ap.add_argument("--mode", default="ops",
                     choices=["ops", "ops_operands"])
     ap.add_argument("--steps", type=int, default=300)
@@ -69,6 +71,9 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-check-treedef", action="store_true",
+                    help="resume across benign checkpoint treedef-repr "
+                         "drift (e.g. after a JAX upgrade)")
     ap.add_argument("--eval-only", action="store_true")
     args = ap.parse_args()
 
@@ -78,16 +83,34 @@ def main():
     print(f"dataset: {len(train.ids)} train / {len(test.ids)} test, "
           f"vocab={ds.vocab.size}, mode={ds.mode}")
 
+    if args.target == "all":
+        heads = tuple(sorted(train.targets))
+    else:
+        heads = tuple(t for t in args.target.split(",") if t)
+    unknown = sorted(set(heads) - set(train.targets))
+    if not heads or unknown:
+        ap.error(f"unknown target(s) {unknown or [args.target]}; "
+                 f"available: {sorted(train.targets)} or 'all'")
+    multi = len(heads) > 1
+
     mesh = jax.make_mesh((args.mesh_data, args.mesh_model),
                          ("data", "model"))
     rules = ShardingRules(mesh)
     init_fn, apply_fn, axes_fn = CM.get_model(args.model)
-    params = init_fn(jax.random.PRNGKey(args.seed), cfg)
+    if multi:
+        params = init_fn(jax.random.PRNGKey(args.seed), cfg, heads=heads)
+    else:
+        params = init_fn(jax.random.PRNGKey(args.seed), cfg)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
-    print(f"model: {args.model}/{args.preset}, {n_params/1e6:.1f}M params")
+    print(f"model: {args.model}/{args.preset}, {n_params/1e6:.1f}M params, "
+          f"heads={list(heads)}")
 
-    y, norm_stats = DS.normalize_targets(train.targets[args.target])
-    src = PIPE.ArraySource(ids=train.ids, y=y.astype(np.float32))
+    if multi:
+        y, norm_stats = DS.stacked_normalized_targets(train.targets, heads)
+    else:
+        y, norm_stats = DS.normalize_targets(train.targets[heads[0]])
+        y = y.astype(np.float32)
+    src = PIPE.ArraySource(ids=train.ids, y=y)
     loader = PIPE.Loader(src, args.batch, seed=args.seed)
 
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
@@ -96,8 +119,7 @@ def main():
     err_state = compress.init_error_state(params) if args.compress_grads \
         else None
 
-    def loss_fn(p, ids, yy):
-        return jnp.mean(jnp.square(apply_fn(p, ids) - yy))
+    loss_fn = TR.make_loss_fn(apply_fn, heads if multi else None)
 
     @jax.jit
     def train_step(state, ids, yy):
@@ -112,7 +134,8 @@ def main():
     sup = fault.TrainSupervisor(args.ckpt_dir, save_every=args.save_every)
     sup.install_signal_handler()
     state = (params, adamw.init_state(params), err_state)
-    state, start, extra = sup.try_restore(state)
+    state, start, extra = sup.try_restore(
+        state, check_treedef=not args.no_check_treedef)
     if start:
         print(f"resumed from step {start}")
         loader.state = PIPE.LoaderState(**extra.get("loader", {}))
@@ -136,15 +159,25 @@ def main():
         with mesh:
             state = sup.run(state, step_fn, args.steps, start_step=start,
                             extra_fn=lambda: {"loader":
-                                              loader.state.as_dict()},
+                                              loader.state.as_dict(),
+                                              "norm_stats": norm_stats,
+                                              "heads": list(heads)},
                             on_step=on_step)
         print(f"trained {args.steps - start} steps in "
               f"{time.time()-t0:.1f}s")
 
     result = TR.TrainResult(params=state[0], stats={},
-                            norm_stats=norm_stats)
-    metrics = TR.evaluate(args.model, cfg, result, test, args.target)
-    print("eval:", json.dumps({k: round(v, 3) for k, v in metrics.items()}))
+                            norm_stats=norm_stats,
+                            heads=heads if multi else None)
+    if multi:
+        metrics = TR.evaluate(args.model, cfg, result, test)
+        for t, m in metrics.items():
+            print(f"eval[{t}]:",
+                  json.dumps({k: round(v, 3) for k, v in m.items()}))
+    else:
+        metrics = TR.evaluate(args.model, cfg, result, test, heads[0])
+        print("eval:",
+              json.dumps({k: round(v, 3) for k, v in metrics.items()}))
     return metrics
 
 

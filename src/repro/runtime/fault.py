@@ -88,11 +88,15 @@ class TrainSupervisor:
             self.preempted = True
         signal.signal(signal.SIGTERM, _handler)
 
-    def try_restore(self, state, shardings=None):
-        """Returns (state, start_step, extra) — or the inputs if no ckpt."""
+    def try_restore(self, state, shardings=None, check_treedef: bool = True):
+        """Returns (state, start_step, extra) — or the inputs if no ckpt.
+
+        check_treedef is forwarded to ckpt.restore; pass False to resume
+        across benign treedef-repr drift (e.g. a JAX upgrade)."""
         try:
             state, step, extra = ckpt.restore(self.ckpt_dir, state,
-                                              shardings=shardings)
+                                              shardings=shardings,
+                                              check_treedef=check_treedef)
             return state, step, extra
         except FileNotFoundError:
             return state, 0, {}

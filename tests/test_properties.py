@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import augment as AUG
