@@ -64,8 +64,8 @@ def paper_rmse(full: bool = False, seed: int = 0):
     for target in ["register_pressure", "valu_utilization"]:
         for kind in ["fc", "lstm", "conv1d"]:
             t0 = time.time()
-            res = TR.train_model(kind, cfg, tr, target, steps=steps[kind],
-                                 batch_size=128, lr=2e-3, seed=seed)
+            res = TR.TrainEngine(kind, cfg, target, steps=steps[kind],
+                                 batch_size=128, lr=2e-3, seed=seed).fit(tr)
             m = TR.evaluate(kind, cfg, res, te, target)
             results[(kind, target)] = m
             _row(f"paper_rmse/{kind}/{target}", (time.time() - t0) * 1e6,
@@ -91,8 +91,9 @@ def operand_ablation(full: bool = False, seed: int = 0):
                               vocab_size=8192, augment_factor=2, seed=seed)
         tr, te = ds.split(0.1)
         t0 = time.time()
-        res = TR.train_model("conv1d", cfg, tr, "register_pressure",
-                             steps=steps, batch_size=64, lr=2e-3, seed=seed)
+        res = TR.TrainEngine("conv1d", cfg, "register_pressure",
+                             steps=steps, batch_size=64, lr=2e-3,
+                             seed=seed).fit(tr)
         m = TR.evaluate("conv1d", cfg, res, te, "register_pressure")
         out[mode] = m
         _row(f"operand_ablation/{mode}", (time.time() - t0) * 1e6,
@@ -231,6 +232,52 @@ def serve_bench(full: bool = False, seed: int = 0):
     return out
 
 
+# --------------------------------------------------------------- train_bench
+def train_bench(full: bool = False, seed: int = 0):
+    """TrainEngine bucketed batching vs max_seq padding on a mixed-length
+    corpus: steady-state steps/s (median step time, robust to per-bucket
+    compile spikes) and per-target eval parity on the same seed.
+
+    ``bucketed`` is the engine default (batch_max: identical batch
+    composition, per-batch bucket pad width — gradient-identical to the
+    padded baseline, so eval metrics match to float noise).
+    ``bucketed_homogeneous`` single-bucket batches are the throughput
+    ceiling; their batches are length-correlated, so eval parity is NOT
+    claimed for them (see data/pipeline.py)."""
+    n = 4000 if full else 1000
+    steps = 400 if full else 160
+    cfg = CostModelConfig(name="train-bench", vocab_size=4096, max_seq=256,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    ds = DS.build_dataset(n, mode="ops", max_seq=256, vocab_size=4096,
+                          augment_factor=2, seed=seed)
+    tr, te = ds.split(0.1)
+    out = {}
+    runs = [("padded_max_seq", dict(bucketed=False)),
+            ("bucketed", dict(bucketed=True)),
+            ("bucketed_homogeneous",
+             dict(bucketed=True, bucket_mode="homogeneous",
+                  drop_remainder=False))]   # tails: every bucket trains
+    for name, kw in runs:
+        dts = []
+        eng = TR.TrainEngine("conv1d", cfg, "register_pressure",
+                             steps=steps, batch_size=64, lr=2e-3,
+                             seed=seed, **kw)
+        res = eng.fit(tr, on_step=lambda s, dt: dts.append(dt))
+        m = TR.evaluate("conv1d", cfg, res, te, "register_pressure")
+        med = float(np.median(dts))
+        out[name] = {"steps_per_s": 1.0 / med, "metrics": m}
+        _row(f"train_bench/{name}", med * 1e6,
+             f"steps_s={1.0 / med:.1f}"
+             f";rmse_rel={m['rmse_rel_pct']:.2f}%"
+             f";exact={m['exact_pct']:.1f}%")
+    for name in ["bucketed", "bucketed_homogeneous"]:
+        speedup = out[name]["steps_per_s"] / \
+            out["padded_max_seq"]["steps_per_s"]
+        _row(f"train_bench/speedup_{name}", 0.0, f"speedup={speedup:.2f}x")
+    return out
+
+
 # ------------------------------------------------- transformer_extension
 def transformer_extension(full: bool = False, seed: int = 0):
     """Beyond-paper: the paper's §6 future-work #1 (Transformer cost
@@ -246,10 +293,10 @@ def transformer_extension(full: bool = False, seed: int = 0):
     out = {}
     for kind in ["conv1d", "xformer"]:
         t0 = time.time()
-        res = TR.train_model(kind, cfg, tr, "register_pressure",
+        res = TR.TrainEngine(kind, cfg, "register_pressure",
                              steps=steps, batch_size=64,
                              lr=2e-3 if kind == "conv1d" else 1e-3,
-                             seed=seed)
+                             seed=seed).fit(tr)
         m = TR.evaluate(kind, cfg, res, te, "register_pressure")
         out[kind] = m
         _row(f"transformer_extension/{kind}", (time.time() - t0) * 1e6,
@@ -264,6 +311,7 @@ BENCHES = {
     "inference_speed": inference_speed,
     "kernel_bench": kernel_bench,
     "serve_bench": serve_bench,
+    "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,
 }

@@ -27,8 +27,9 @@ def main(n_graphs=900, train_steps=300, seed=0):
                           vocab_size=4096, augment_factor=2, seed=seed)
     tr, te = ds.split(0.1)
     print(f"training one model for all targets: {list(CM.DEFAULT_HEADS)}")
-    res = TR.train_model("conv1d", cfg, tr, CM.DEFAULT_HEADS,
-                         steps=train_steps, batch_size=128, lr=2e-3)
+    res = TR.TrainEngine("conv1d", cfg, CM.DEFAULT_HEADS,
+                         steps=train_steps, batch_size=128, lr=2e-3,
+                         seed=seed).fit(tr)
     for t, m in TR.evaluate("conv1d", cfg, res, te).items():
         print(f"  eval[{t}]: rmse_rel={m['rmse_rel_pct']:.1f}% "
               f"mape={m['mape_pct']:.1f}%")

@@ -20,9 +20,11 @@ ds = DS.build_dataset(1200, mode="ops", max_seq=128, vocab_size=2048,
 train, test = ds.split(0.1)
 
 print("2) training the Conv1D+MaxPool+FC regressor on register pressure ...")
-res = TR.train_model("conv1d", cfg, train, "register_pressure",
-                     steps=500, batch_size=128, lr=2e-3, verbose=True,
-                     log_every=100)
+engine = TR.TrainEngine("conv1d", cfg, "register_pressure",
+                        steps=500, batch_size=128, lr=2e-3, verbose=True,
+                        log_every=100)
+res = engine.fit(train)
+print(f"   {res.stats['steps_per_s']:.1f} steps/s (bucketed batches)")
 metrics = TR.evaluate("conv1d", cfg, res, test, "register_pressure")
 print("   test metrics:", {k: round(v, 2) for k, v in metrics.items()})
 

@@ -39,15 +39,24 @@ from repro.ir import dataset as DS
 from repro.ir.graph import Graph
 
 
-def default_buckets(max_seq: int, min_bucket: int = 32) -> Tuple[int, ...]:
-    """Power-of-two sequence-length buckets up to (and including) max_seq."""
-    out = []
-    b = min_bucket
-    while b < max_seq:
-        out.append(b)
-        b *= 2
-    out.append(max_seq)
-    return tuple(out)
+# Canonical bucket ladder lives in the dataset layer (training and serving
+# share it); re-exported here for existing callers.
+from repro.ir.dataset import default_buckets  # noqa: F401  (re-export)
+
+
+def pad_slack(kind: str, cfg) -> int:
+    """Extra pad positions a bucketed sequence needs so bucket-padded
+    predictions exactly match max_seq-padded ones.
+
+    Conv towers propagate boundary conditions inward by sum(fs//2)
+    positions per side (the tower's right-edge "cone"). Keeping 2x that
+    as pad slack leaves an interior run of constant pad activations
+    between the last real token's cone and the bucket edge's cone, which
+    makes bucketed outputs exactly match full-length padding. The other
+    families mask padding position-wise, so 0 slack is enough."""
+    if kind == "conv1d":
+        return 2 * sum(fs // 2 for fs in cfg.conv_filters)
+    return 0
 
 
 @dataclass
@@ -80,15 +89,7 @@ class CostModelService:
             self.buckets = default_buckets(self.max_seq)
         self.buckets = tuple(sorted(b for b in self.buckets
                                     if b <= self.max_seq)) or (self.max_seq,)
-        # Conv towers propagate boundary conditions inward by sum(fs//2)
-        # positions per side (the tower's right-edge "cone"). Keeping
-        # 2x that as pad slack leaves an interior run of constant pad
-        # activations between the last real token's cone and the bucket
-        # edge's cone, which makes bucketed predictions exactly match
-        # full-length padding. The other families mask padding
-        # position-wise, so 0 slack is enough.
-        self._pad_slack = (2 * sum(fs // 2 for fs in self.cfg.conv_filters)
-                           if self.kind == "conv1d" else 0)
+        self._pad_slack = pad_slack(self.kind, self.cfg)
 
     # ------------------------------------------------------------- encoding
     def _bucket_len(self, n_tokens: int) -> int:

@@ -106,11 +106,10 @@ class Vocab:
             return cls(json.load(f))
 
 
-def fit_vocab(token_seqs: Iterable[Sequence[str]],
-              max_size: int = 8192, min_count: int = 1) -> Vocab:
-    counts: Counter = Counter()
-    for seq in token_seqs:
-        counts.update(seq)
+def vocab_from_counts(counts: Counter, max_size: int = 8192,
+                      min_count: int = 1) -> Vocab:
+    """Build a Vocab from pre-accumulated token counts (the streaming
+    count-then-encode path: pass 1 counts, pass 2 encodes)."""
     vocab = {t: i for i, t in enumerate(SPECIALS)}
     for tok, c in counts.most_common():
         if len(vocab) >= max_size:
@@ -118,3 +117,11 @@ def fit_vocab(token_seqs: Iterable[Sequence[str]],
         if c >= min_count and tok not in vocab:
             vocab[tok] = len(vocab)
     return Vocab(vocab)
+
+
+def fit_vocab(token_seqs: Iterable[Sequence[str]],
+              max_size: int = 8192, min_count: int = 1) -> Vocab:
+    counts: Counter = Counter()
+    for seq in token_seqs:
+        counts.update(seq)
+    return vocab_from_counts(counts, max_size=max_size, min_count=min_count)

@@ -1,9 +1,26 @@
-"""Supervised trainer for the cost models (paper §3-4).
+"""Supervised training for the cost models (paper §3-4) — one engine.
 
-Small configs train single-device; the 100M driver trains data-parallel
-under a mesh with optional int8 error-feedback gradient compression
-(:mod:`repro.optim.compress`). Metrics match the paper: relative RMSE
-("5-7% range") and %-exact for register pressure (Fig. 6: ~75% exact).
+:class:`TrainEngine` owns the repo's ONE training step loop. Every caller
+— the quickstart example, the serve/benchmark drivers, the production
+``launch/train.py`` CLI, and the :func:`train_model` compatibility wrapper
+— builds an engine and calls :meth:`TrainEngine.fit`. The engine wires the
+full substrate every time:
+
+* a sharded, prefetching :class:`repro.data.pipeline.Loader` (deterministic,
+  resumable cursor), **bucket-aware** by default: batches are grouped by
+  power-of-two sequence bucket (the same ladder serving uses, including the
+  conv1d pad-slack rule), so each train step jits one program per bucket
+  instead of padding every batch to the global ``max_seq``;
+* mesh + :class:`~repro.runtime.sharding.ShardingRules` (params are placed
+  by the per-family logical axis tables when the mesh has >1 device);
+* optional int8 error-feedback gradient compression on the DP axis;
+* a :class:`~repro.runtime.fault.TrainSupervisor` step loop: periodic +
+  on-preemption atomic checkpoints carrying the loader cursor, and
+  automatic resume — or, with ``ckpt_dir=None``, the same loop with
+  persistence disabled.
+
+Metrics match the paper: relative RMSE ("5-7% range") and %-exact for
+register pressure (Fig. 6: ~75% exact).
 
 ``target`` may be a single name (legacy scalar head) or a sequence of
 names, which trains one shared encoder with a per-target head dict under
@@ -13,6 +30,7 @@ per target.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
@@ -22,8 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import models as CM
+from repro.data import pipeline as PIPE
 from repro.ir import dataset as DS
-from repro.optim import adamw
+from repro.optim import adamw, compress
+from repro.runtime import fault
+from repro.runtime.sharding import ShardingRules, tree_shardings
 
 TargetSpec = Union[str, Sequence[str]]
 
@@ -36,12 +57,6 @@ class TrainResult:
     # single-target: {"mu": ..., "sigma": ...}; multi-target: {target: {...}}
     norm_stats: Dict[str, Any] = field(default_factory=dict)
     heads: Optional[Tuple[str, ...]] = None
-
-
-def _batches(rng, n, batch_size):
-    perm = rng.permutation(n)
-    for i in range(0, n - batch_size + 1, batch_size):
-        yield perm[i:i + batch_size]
 
 
 def make_loss_fn(apply_fn, heads: Optional[Tuple[str, ...]] = None):
@@ -59,56 +74,208 @@ def make_loss_fn(apply_fn, heads: Optional[Tuple[str, ...]] = None):
 
 def make_sgd_step(apply_fn, opt_cfg, grad_transform=None,
                   heads: Optional[Tuple[str, ...]] = None):
+    """Single-step builder for custom/external loops (notebooks, tests).
+
+    The TrainEngine composes the same pieces itself because its step also
+    threads the compression error state; this stays the minimal public
+    building block."""
     loss_fn = make_loss_fn(apply_fn, heads)
 
     def step(params, opt_state, ids, y):
         loss, grads = jax.value_and_grad(loss_fn)(params, ids, y)
         if grad_transform is not None:
             grads = grad_transform(grads)
-        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
+        params, opt_state, _ = adamw.apply_updates(params, grads, opt_state,
                                                    opt_cfg)
         return params, opt_state, loss
     return step
 
 
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every knob of the unified step loop (CLI flags map 1:1 onto this)."""
+    steps: int = 300
+    batch_size: int = 64
+    lr: float = 1e-3
+    weight_decay: float = 0.01
+    seed: int = 0
+    log_every: int = 100
+    verbose: bool = False
+    # batching: per-bucket pad widths (one jitted program per bucket).
+    # "batch_max" keeps the global shuffle and is gradient-identical to
+    # max_seq padding; "homogeneous" maximizes the step-time win but
+    # length-correlates batch composition (see data/pipeline.py).
+    bucketed: bool = True
+    bucket_mode: str = "batch_max"
+    min_bucket: int = 32
+    drop_remainder: bool = True
+    # mesh / sharding
+    mesh_data: int = 1
+    mesh_model: int = 1
+    # substrate
+    compress_grads: bool = False
+    ckpt_dir: Optional[str] = None     # None -> loop without persistence
+    save_every: int = 100
+    keep: int = 3
+    check_treedef: bool = True
+    install_sigterm: bool = False   # checkpoint + stop on SIGTERM
+    shard_index: int = 0
+    num_shards: int = 1
+    prefetch: int = 2
+
+
+class TrainEngine:
+    """The one way to train a cost model (see module docstring).
+
+    >>> engine = TrainEngine("conv1d", cfg, ("latency_us",), steps=500)
+    >>> result = engine.fit(train_ds)
+    """
+
+    def __init__(self, kind: str, cfg, target: TargetSpec,
+                 engine: Optional[EngineConfig] = None, **overrides):
+        self.kind = kind
+        self.cfg = cfg
+        self.heads = None if isinstance(target, str) else tuple(target)
+        self.target = target
+        self.ecfg = dataclasses.replace(engine or EngineConfig(),
+                                        **overrides)
+        self.init_fn, self.apply_fn, self.axes_fn = CM.get_model(kind)
+
+    # ------------------------------------------------------------- pipeline
+    def bucket_assignments(self, train: DS.CostDataset
+                           ) -> Optional[np.ndarray]:
+        """Per-row train bucket length, honoring the serving-side pad-slack
+        rule (conv1d needs slack so bucketing is prediction-preserving)."""
+        if not self.ecfg.bucketed:
+            return None
+        from repro.core.service import pad_slack
+        # ladder from the DATASET width (the unbucketed path feeds ids at
+        # dataset width too); a model whose capacity is narrower than the
+        # data (e.g. an xformer pos table) fails loudly either way
+        buckets = DS.default_buckets(train.max_seq, self.ecfg.min_bucket)
+        return DS.bucket_lengths(train.get_seq_lens(), buckets,
+                                 pad_slack(self.kind, self.cfg))
+
+    def make_loader(self, train: DS.CostDataset, y: np.ndarray
+                    ) -> PIPE.Loader:
+        e = self.ecfg
+        if train.ids is not None:
+            src = PIPE.ArraySource(ids=train.ids, y=y)
+        else:
+            # bucket-grouped storage: materialize rows on demand at the
+            # widest width a batch could need; the Loader trims per bucket
+            width = max(train.bucket_ids) if e.bucketed else train.max_seq
+            src = PIPE.FnSource(train.n, lambda idx: {
+                "ids": train.row_ids(idx, width), "y": y[idx]})
+        return PIPE.Loader(src, e.batch_size, seed=e.seed,
+                           shard_index=e.shard_index,
+                           num_shards=e.num_shards,
+                           drop_remainder=e.drop_remainder,
+                           prefetch=e.prefetch,
+                           bucket_by=self.bucket_assignments(train),
+                           bucket_mode=e.bucket_mode)
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, train: DS.CostDataset, *,
+            on_step: Optional[Callable] = None) -> TrainResult:
+        e = self.ecfg
+        key = jax.random.PRNGKey(e.seed)
+        if self.heads:
+            params = self.init_fn(key, self.cfg, heads=self.heads)
+            y, norm_stats = DS.stacked_normalized_targets(train.targets,
+                                                          self.heads)
+        else:
+            params = self.init_fn(key, self.cfg)
+            y, norm_stats = DS.normalize_targets(train.targets[self.target])
+            y = y.astype(np.float32)
+        loader = self.make_loader(train, y)
+
+        mesh = jax.make_mesh((e.mesh_data, e.mesh_model), ("data", "model"))
+        if mesh.devices.size > 1:
+            rules = ShardingRules(mesh)
+            axes = self.axes_fn(self.cfg, heads=self.heads) if self.heads \
+                else self.axes_fn(self.cfg)
+            shapes = jax.tree.map(lambda l: l.shape, params)
+            params = jax.tree.map(jax.device_put, params,
+                                  tree_shardings(rules, axes, shapes))
+
+        opt_cfg = adamw.AdamWConfig(lr=e.lr, total_steps=e.steps,
+                                    warmup_steps=min(50, e.steps // 10),
+                                    weight_decay=e.weight_decay)
+        err0 = compress.init_error_state(params) if e.compress_grads \
+            else None
+        loss_fn = make_loss_fn(self.apply_fn, self.heads)
+
+        @jax.jit
+        def train_step(state, ids, yy):
+            params, opt_state, err = state
+            loss, grads = jax.value_and_grad(loss_fn)(params, ids, yy)
+            if err is not None:
+                grads, err = compress.compress_grads(grads, err)
+            params, opt_state, _ = adamw.apply_updates(
+                params, grads, opt_state, opt_cfg)
+            return (params, opt_state, err), loss
+
+        sup = fault.TrainSupervisor(e.ckpt_dir, save_every=e.save_every,
+                                    keep=e.keep)
+        if e.install_sigterm:
+            sup.install_signal_handler()
+        state = (params, adamw.init_state(params), err0)
+        state, start, extra = sup.try_restore(
+            state, check_treedef=e.check_treedef)
+        if start and "loader" in extra:
+            loader.state = PIPE.LoaderState(**extra["loader"])
+
+        it = iter(loader)
+        history = []
+        last = [jnp.float32(np.nan)]
+
+        def step_fn(state, step):
+            batch = next(it)
+            state, loss = train_step(state, jnp.asarray(batch["ids"]),
+                                     jnp.asarray(batch["y"]))
+            last[0] = loss     # device value; sync only at log points
+            return state
+
+        def _on_step(step, dt):
+            if step % e.log_every == 0 or step == e.steps:
+                history.append((step, float(last[0])))
+                if e.verbose:
+                    print(f"  step {step}: mse={float(last[0]):.4f} "
+                          f"({dt * 1e3:.0f} ms)")
+            if on_step is not None:
+                on_step(step, dt)
+
+        heads_extra = list(self.heads) if self.heads else [self.target]
+        t0 = time.time()
+        with mesh:
+            state = sup.run(
+                state, step_fn, e.steps, start_step=start,
+                extra_fn=lambda: {"loader": loader.state.as_dict(),
+                                  "norm_stats": norm_stats,
+                                  "heads": heads_extra},
+                on_step=_on_step)
+        wall = time.time() - t0
+        steps_run = max(e.steps - start, 0)
+        # a resume that finds the run already complete executes 0 steps:
+        # final_loss is then NaN (nothing ran) and steps_per_s 0 by design
+        stats = {"final_loss": float(last[0]),
+                 "steps": float(steps_run),
+                 "wall_time_s": wall,
+                 "steps_per_s": steps_run / max(wall, 1e-9)}
+        return TrainResult(params=state[0], stats=stats, history=history,
+                           norm_stats=norm_stats, heads=self.heads)
+
+
 def train_model(kind: str, cfg, train: DS.CostDataset, target: TargetSpec,
                 *, steps: int = 300, batch_size: int = 64,
-                lr: float = 1e-3, seed: int = 0,
-                jit_step=None, log_every: int = 100,
-                verbose: bool = False) -> TrainResult:
-    heads = None if isinstance(target, str) else tuple(target)
-    init_fn, apply_fn, _ = CM.get_model(kind)
-    key = jax.random.PRNGKey(seed)
-    if heads:
-        params = init_fn(key, cfg, heads=heads)
-        y, norm_stats = DS.stacked_normalized_targets(train.targets, heads)
-    else:
-        params = init_fn(key, cfg)
-        y, norm_stats = DS.normalize_targets(train.targets[target])
-    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=min(50, steps // 10),
-                                total_steps=steps, weight_decay=0.01)
-    step_fn = jit_step or jax.jit(make_sgd_step(apply_fn, opt_cfg,
-                                                heads=heads))
-    opt_state = adamw.init_state(params)
-    rng = np.random.default_rng(seed)
-    history = []
-    it = 0
-    t0 = time.time()
-    while it < steps:
-        for idx in _batches(rng, len(train.ids), batch_size):
-            ids = jnp.asarray(train.ids[idx])
-            yb = jnp.asarray(y[idx])
-            params, opt_state, loss = step_fn(params, opt_state, ids, yb)
-            it += 1
-            if it % log_every == 0:
-                history.append((it, float(loss)))
-                if verbose:
-                    print(f"  step {it}: mse={float(loss):.4f} "
-                          f"({(time.time()-t0):.1f}s)")
-            if it >= steps:
-                break
-    return TrainResult(params=params, stats={}, history=history,
-                       norm_stats=norm_stats, heads=heads)
+                lr: float = 1e-3, seed: int = 0, log_every: int = 100,
+                verbose: bool = False, **engine_overrides) -> TrainResult:
+    """Compatibility wrapper: a TrainEngine with in-memory defaults."""
+    return TrainEngine(kind, cfg, target, steps=steps,
+                       batch_size=batch_size, lr=lr, seed=seed,
+                       log_every=log_every, verbose=verbose,
+                       **engine_overrides).fit(train)
 
 
 def _target_metrics(pred_n: np.ndarray, true: np.ndarray,
@@ -139,9 +306,10 @@ def evaluate(kind: str, cfg, result: TrainResult, test: DS.CostDataset,
     """
     _, apply_fn, _ = CM.get_model(kind)
     apply_j = jax.jit(apply_fn)
+    test_ids = test.dense_ids()
     preds = []
-    for i in range(0, len(test.ids), batch_size):
-        ids = jnp.asarray(test.ids[i:i + batch_size])
+    for i in range(0, len(test_ids), batch_size):
+        ids = jnp.asarray(test_ids[i:i + batch_size])
         preds.append(jax.device_get(apply_j(result.params, ids)))
     if result.heads:
         pred_n = {t: np.concatenate([np.asarray(p[t]) for p in preds])

@@ -42,8 +42,12 @@ def main():
     tr, te = ds.split(0.1)
     print(f"training joint multi-target cost model "
           f"({', '.join(CM.DEFAULT_HEADS)})...")
-    res = TR.train_model("conv1d", cfg, tr, CM.DEFAULT_HEADS,
-                         steps=args.train_steps, batch_size=128, lr=2e-3)
+    engine = TR.TrainEngine("conv1d", cfg, CM.DEFAULT_HEADS,
+                            steps=args.train_steps, batch_size=128,
+                            lr=2e-3, seed=args.seed)
+    res = engine.fit(tr)
+    print(f"trained at {res.stats['steps_per_s']:.1f} steps/s "
+          f"(bucketed batches)")
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160,

@@ -1,9 +1,10 @@
-"""Production training driver for the MLIR cost model.
+"""Production training CLI — a thin argparse layer over TrainEngine.
 
-Wires together every substrate layer: dataset build (or load), sharded data
-pipeline, model init, mesh + sharding rules, AdamW, int8 error-feedback
-gradient compression on the DP axis, fault-tolerant supervisor (atomic
-checkpoints, resume, preemption handling), and evaluation.
+The engine (core/trainer.py) owns the step loop and wires every substrate
+layer: bucketed dataset build (or load), sharded bucket-aware pipeline,
+mesh + sharding rules, AdamW, int8 error-feedback grad compression on the
+DP axis, fault-tolerant supervisor (atomic checkpoints, resume with the
+loader cursor, preemption handling), and evaluation.
 
     PYTHONPATH=src python -m repro.launch.train --preset small --steps 300
     PYTHONPATH=src python -m repro.launch.train --preset 100m --steps 200 \
@@ -18,21 +19,16 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.costmodel import (COSTMODEL_100M, COSTMODEL_BASE,
-                                     COSTMODEL_SMALL, CostModelConfig)
+                                     COSTMODEL_SMALL)
 from repro.core import models as CM
 from repro.core import trainer as TR
-from repro.data import pipeline as PIPE
 from repro.ir import dataset as DS
 from repro.optim import adamw, compress
 from repro.runtime import fault
-from repro.runtime.sharding import ShardingRules
 
 PRESETS = {"small": COSTMODEL_SMALL, "base": COSTMODEL_BASE,
            "100m": COSTMODEL_100M}
@@ -44,7 +40,8 @@ def build_or_load_dataset(args, cfg) -> DS.CostDataset:
         return DS.CostDataset.load(path)
     ds = DS.build_dataset(args.n_graphs, mode=args.mode,
                           max_seq=cfg.max_seq, vocab_size=cfg.vocab_size,
-                          augment_factor=2, seed=args.seed)
+                          augment_factor=2, seed=args.seed,
+                          layout=args.layout)
     if path:
         ds.save(path)
     return ds
@@ -60,6 +57,10 @@ def main():
                          "multi-head model, or 'all'")
     ap.add_argument("--mode", default="ops",
                     choices=["ops", "ops_operands"])
+    ap.add_argument("--layout", default="bucketed",
+                    choices=["bucketed", "dense"],
+                    help="id storage: per-bucket arrays (RAM-proportional "
+                         "to real tokens) or one (N, max_seq) array")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--lr", type=float, default=2e-3)
@@ -71,6 +72,8 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="pad every batch to max_seq instead of per-bucket")
     ap.add_argument("--no-check-treedef", action="store_true",
                     help="resume across benign checkpoint treedef-repr "
                          "drift (e.g. after a JAX upgrade)")
@@ -80,8 +83,9 @@ def main():
     cfg = PRESETS[args.preset]
     ds = build_or_load_dataset(args, cfg)
     train, test = ds.split(0.1, seed=args.seed)
-    print(f"dataset: {len(train.ids)} train / {len(test.ids)} test, "
-          f"vocab={ds.vocab.size}, mode={ds.mode}")
+    print(f"dataset: {len(train)} train / {len(test)} test, "
+          f"vocab={ds.vocab.size}, mode={ds.mode}, layout="
+          f"{'dense' if ds.ids is not None else 'bucketed'}")
 
     if args.target == "all":
         heads = tuple(sorted(train.targets))
@@ -91,91 +95,49 @@ def main():
     if not heads or unknown:
         ap.error(f"unknown target(s) {unknown or [args.target]}; "
                  f"available: {sorted(train.targets)} or 'all'")
-    multi = len(heads) > 1
+    target = heads if len(heads) > 1 else heads[0]
 
-    mesh = jax.make_mesh((args.mesh_data, args.mesh_model),
-                         ("data", "model"))
-    rules = ShardingRules(mesh)
-    init_fn, apply_fn, axes_fn = CM.get_model(args.model)
-    if multi:
-        params = init_fn(jax.random.PRNGKey(args.seed), cfg, heads=heads)
+    engine = TR.TrainEngine(
+        args.model, cfg, target,
+        steps=args.steps, batch_size=args.batch, lr=args.lr,
+        seed=args.seed, log_every=50, verbose=True,
+        bucketed=not args.no_bucketing,
+        mesh_data=args.mesh_data, mesh_model=args.mesh_model,
+        compress_grads=args.compress_grads,
+        ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+        check_treedef=not args.no_check_treedef, install_sigterm=True)
+
+    if args.eval_only:
+        init_kw = {"heads": engine.heads} if engine.heads else {}
+        params = engine.init_fn(jax.random.PRNGKey(args.seed), cfg,
+                                **init_kw)
+        like = (params, adamw.init_state(params),
+                compress.init_error_state(params)
+                if args.compress_grads else None)
+        sup = fault.TrainSupervisor(args.ckpt_dir)
+        state, start, extra = sup.try_restore(
+            like, check_treedef=not args.no_check_treedef)
+        if not start:
+            ap.error(f"--eval-only: no checkpoint under {args.ckpt_dir}")
+        result = TR.TrainResult(params=state[0], stats={},
+                                norm_stats=extra["norm_stats"],
+                                heads=engine.heads)
     else:
-        params = init_fn(jax.random.PRNGKey(args.seed), cfg)
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
-    print(f"model: {args.model}/{args.preset}, {n_params/1e6:.1f}M params, "
-          f"heads={list(heads)}")
+        result = engine.fit(train)
+        if result.stats["steps"]:
+            print(f"trained {result.stats['steps']:.0f} steps in "
+                  f"{result.stats['wall_time_s']:.1f}s "
+                  f"({result.stats['steps_per_s']:.1f} steps/s)")
+        else:
+            print(f"run already complete in {args.ckpt_dir}; evaluating")
 
-    if multi:
-        y, norm_stats = DS.stacked_normalized_targets(train.targets, heads)
-    else:
-        y, norm_stats = DS.normalize_targets(train.targets[heads[0]])
-        y = y.astype(np.float32)
-    src = PIPE.ArraySource(ids=train.ids, y=y)
-    loader = PIPE.Loader(src, args.batch, seed=args.seed)
-
-    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
-                                warmup_steps=min(50, args.steps // 10),
-                                weight_decay=0.01)
-    err_state = compress.init_error_state(params) if args.compress_grads \
-        else None
-
-    loss_fn = TR.make_loss_fn(apply_fn, heads if multi else None)
-
-    @jax.jit
-    def train_step(state, ids, yy):
-        params, opt_state, err = state
-        loss, grads = jax.value_and_grad(loss_fn)(params, ids, yy)
-        if err is not None:
-            grads, err = compress.compress_grads(grads, err)
-        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
-                                                   opt_cfg)
-        return (params, opt_state, err), loss
-
-    sup = fault.TrainSupervisor(args.ckpt_dir, save_every=args.save_every)
-    sup.install_signal_handler()
-    state = (params, adamw.init_state(params), err_state)
-    state, start, extra = sup.try_restore(
-        state, check_treedef=not args.no_check_treedef)
-    if start:
-        print(f"resumed from step {start}")
-        loader.state = PIPE.LoaderState(**extra.get("loader", {}))
-
-    it = iter(loader)
-    losses = []
-
-    def step_fn(state, step):
-        batch = next(it)
-        state, loss = train_step(state, jnp.asarray(batch["ids"]),
-                                 jnp.asarray(batch["y"]))
-        losses.append(float(loss))
-        return state
-
-    def on_step(step, dt):
-        if step % 50 == 0 or step == args.steps:
-            print(f"step {step}: loss={losses[-1]:.4f} ({dt*1e3:.0f} ms)")
-
-    if not args.eval_only:
-        t0 = time.time()
-        with mesh:
-            state = sup.run(state, step_fn, args.steps, start_step=start,
-                            extra_fn=lambda: {"loader":
-                                              loader.state.as_dict(),
-                                              "norm_stats": norm_stats,
-                                              "heads": list(heads)},
-                            on_step=on_step)
-        print(f"trained {args.steps - start} steps in "
-              f"{time.time()-t0:.1f}s")
-
-    result = TR.TrainResult(params=state[0], stats={},
-                            norm_stats=norm_stats,
-                            heads=heads if multi else None)
-    if multi:
+    if engine.heads:
         metrics = TR.evaluate(args.model, cfg, result, test)
         for t, m in metrics.items():
             print(f"eval[{t}]:",
                   json.dumps({k: round(v, 3) for k, v in m.items()}))
     else:
-        metrics = TR.evaluate(args.model, cfg, result, test, heads[0])
+        metrics = TR.evaluate(args.model, cfg, result, test, target)
         print("eval:",
               json.dumps({k: round(v, 3) for k, v in metrics.items()}))
     return metrics

@@ -76,8 +76,13 @@ class HeartbeatMonitor:
 
 @dataclass
 class TrainSupervisor:
-    """Checkpoint/restart step-loop wrapper."""
-    ckpt_dir: str
+    """Checkpoint/restart step-loop wrapper.
+
+    ``ckpt_dir=None`` disables persistence: the loop (and its retry
+    policy) still runs, saves become no-ops and restore finds nothing —
+    this is how the TrainEngine serves throwaway in-memory training and
+    production resumable training through ONE step loop."""
+    ckpt_dir: Optional[str]
     save_every: int = 100
     keep: int = 3
     max_step_retries: int = 2
@@ -88,11 +93,19 @@ class TrainSupervisor:
             self.preempted = True
         signal.signal(signal.SIGTERM, _handler)
 
+    def _save(self, step, state, extra_fn: Optional[Callable]):
+        if self.ckpt_dir is None:
+            return
+        ckpt.save(self.ckpt_dir, step, state,
+                  extra=(extra_fn() if extra_fn else {}), keep=self.keep)
+
     def try_restore(self, state, shardings=None, check_treedef: bool = True):
         """Returns (state, start_step, extra) — or the inputs if no ckpt.
 
         check_treedef is forwarded to ckpt.restore; pass False to resume
         across benign treedef-repr drift (e.g. a JAX upgrade)."""
+        if self.ckpt_dir is None:
+            return state, 0, {}
         try:
             state, step, extra = ckpt.restore(self.ckpt_dir, state,
                                               shardings=shardings,
@@ -117,21 +130,16 @@ class TrainSupervisor:
                 except Exception:
                     attempt += 1
                     if attempt > self.max_step_retries:
-                        ckpt.save(self.ckpt_dir, step, state,
-                                  extra=(extra_fn() if extra_fn else {}),
-                                  keep=self.keep)
+                        self._save(step, state, extra_fn)
                         raise
             step += 1
             if on_step:
                 on_step(step, time.monotonic() - t0)
             if step % self.save_every == 0 or self.preempted:
-                ckpt.save(self.ckpt_dir, step, state,
-                          extra=(extra_fn() if extra_fn else {}),
-                          keep=self.keep)
+                self._save(step, state, extra_fn)
                 if self.preempted:
                     return state
-        ckpt.save(self.ckpt_dir, n_steps, state,
-                  extra=(extra_fn() if extra_fn else {}), keep=self.keep)
+        self._save(n_steps, state, extra_fn)
         return state
 
 

@@ -105,24 +105,54 @@ def test_whisper_decode_matches_forward():
         np.asarray(logits_par, np.float32), rtol=5e-2, atol=5e-2)
 
 
-def test_moe_chunking_invariance():
+def _moe_chunk_outputs(cfg, chunk_sizes):
+    """moe_apply output for each chunk size, same params/inputs."""
     from repro.models import moe as M
-    cfg = get_arch("granite-moe-1b-a400m").reduced()
     params = MODEL.init_params(jax.random.PRNGKey(3), cfg)
     p = jax.tree.map(lambda x: x[0], params["layers"])["moe"]
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.normal(size=(2, 12, cfg.d_model)) * 0.1,
                     jnp.float32)
-    import repro.models.moe as moe_mod
-    old = moe_mod.MOE_CHUNK
+    old = M.MOE_CHUNK
+    outs = []
     try:
-        moe_mod.MOE_CHUNK = 12
-        full, _ = M.moe_apply(p, x, cfg, cdt=jnp.float32)
-        moe_mod.MOE_CHUNK = 4
-        chunked, _ = M.moe_apply(p, x, cfg, cdt=jnp.float32)
+        for c in chunk_sizes:
+            M.MOE_CHUNK = c
+            out, _ = M.moe_apply(p, x, cfg, cdt=jnp.float32)
+            outs.append(np.asarray(out))
     finally:
-        moe_mod.MOE_CHUNK = old
-    # capacity is per-chunk, so token drop patterns can differ slightly;
-    # with cf=1.25 and uniform-ish routing at init they should agree
-    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
-                               rtol=1e-3, atol=1e-3)
+        M.MOE_CHUNK = old
+    return outs
+
+
+def test_moe_chunking_invariance_dropless():
+    """Chunked dispatch == unchunked where the property truly holds.
+
+    Capacity dropping is *chunk-local by design* (the per-chunk slot
+    cumsum is the training-time regularizer), so exact invariance only
+    holds when capacity covers every assignment. cf = n_experts makes
+    per-chunk capacity >= chunk_tokens * top_k — dropless — and then the
+    chunking must be numerics-exact."""
+    cfg = get_arch("granite-moe-1b-a400m").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=float(cfg.moe.n_experts)))
+    full, chunked = _moe_chunk_outputs(cfg, [12, 4])
+    np.testing.assert_allclose(chunked, full, rtol=1e-5, atol=1e-6)
+
+
+def test_moe_chunking_bounded_drop_disagreement():
+    """In the droppy default regime (cf=1.25) chunkings legitimately drop
+    different tokens: a token kept under one chunking can overflow its
+    expert's (smaller) per-chunk capacity under another. Tolerate that —
+    but only on a bounded fraction of tokens, and never with exploding
+    magnitude (a regression here would indicate a real dispatch bug, not
+    capacity policy)."""
+    cfg = get_arch("granite-moe-1b-a400m").reduced()
+    full, chunked = _moe_chunk_outputs(cfg, [12, 4])
+    tok_diff = np.abs(chunked - full).max(axis=-1)      # (B, S)
+    disagree = tok_diff > 1e-4
+    assert disagree.mean() <= 0.25, \
+        f"{disagree.mean():.1%} of tokens differ (expect only capacity drops)"
+    # a dropped expert contribution is bounded by the combine weights
+    assert float(tok_diff.max()) < 1.0

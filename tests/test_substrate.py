@@ -96,6 +96,69 @@ def test_loader_resumes_from_cursor():
     np.testing.assert_array_equal(fourth, next(it_ref)["x"])
 
 
+def test_loader_honors_drop_remainder():
+    src = PIPE.ArraySource(x=np.arange(70).reshape(70, 1))
+    dropped = PIPE.Loader(src, 16, seed=0, drop_remainder=True)
+    kept = PIPE.Loader(src, 16, seed=0, drop_remainder=False)
+    assert dropped.steps_per_epoch() == 4
+    assert kept.steps_per_epoch() == 5
+    it = iter(kept)
+    sizes = [len(next(it)["x"]) for _ in range(5)]
+    assert sorted(sizes) == [6, 16, 16, 16, 16]
+    # sharded: the tail is trimmed to a multiple of num_shards
+    sh = PIPE.Loader(src, 16, seed=0, drop_remainder=False, num_shards=4)
+    tail = [len(b["x"]) for b, _ in zip(iter(sh), range(5))]
+    assert sorted(tail) == [1, 4, 4, 4, 4]   # 6 -> 4 rows, 1 per shard
+
+
+def test_loader_empty_epoch_raises_not_hangs():
+    """batch_size > usable rows must fail loudly on the consumer thread
+    (a dead producer would otherwise block q.get() forever)."""
+    src = PIPE.ArraySource(x=np.arange(10).reshape(10, 1))
+    with pytest.raises(ValueError, match="empty epoch"):
+        iter(PIPE.Loader(src, 16, seed=0))
+
+
+def test_homogeneous_small_buckets_promoted_not_starved():
+    """A bucket with fewer rows than the batch size merges into the next
+    bucket up instead of being silently excluded every epoch."""
+    ids = np.ones((40, 64), np.int32)
+    bucket_by = np.where(np.arange(40) < 6, 16, 64)   # 6-row small bucket
+    src = PIPE.ArraySource(ids=ids, r=np.arange(40))
+    ld = PIPE.Loader(src, 8, seed=0, bucket_by=bucket_by,
+                     bucket_mode="homogeneous")
+    it = iter(ld)
+    seen = set()
+    for _ in range(2 * ld.steps_per_epoch()):
+        seen.update(next(it)["r"].tolist())
+    assert set(range(6)) <= seen, "small-bucket rows never trained"
+
+
+def test_loader_resume_identical_batch_stream():
+    """Same seed + restored cursor => identical batch stream, across an
+    epoch boundary, in both plain and bucketed modes."""
+    rng = np.random.default_rng(5)
+    ids = rng.integers(1, 9, (48, 32)).astype(np.int32)
+    bucket_by = np.where(np.arange(48) % 3 == 0, 16, 32)
+    for kw in [{}, {"bucket_by": bucket_by},
+               {"bucket_by": bucket_by, "bucket_mode": "homogeneous"}]:
+        src = PIPE.ArraySource(ids=ids, r=np.arange(48))
+        l1 = PIPE.Loader(src, 8, seed=11, **kw)
+        it1 = iter(l1)
+        for _ in range(8):           # past the 6-step epoch boundary
+            next(it1)
+        cursor = PIPE.LoaderState(**l1.state.as_dict())
+        l2 = PIPE.Loader(src, 8, seed=11, state=cursor, **kw)
+        ref = iter(PIPE.Loader(src, 8, seed=11, **kw))
+        for _ in range(8):
+            next(ref)
+        it2 = iter(l2)
+        for _ in range(10):
+            a, b = next(it2), next(ref)
+            np.testing.assert_array_equal(a["ids"], b["ids"])
+            np.testing.assert_array_equal(a["r"], b["r"])
+
+
 def test_synthetic_lm_batches():
     it = PIPE.synthetic_lm_batches(100, 4, 16)
     b = next(it)
