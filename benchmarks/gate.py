@@ -1,0 +1,49 @@
+"""Soft perf gate over BENCH_serve_concurrent.json.
+
+Fails (exit 1) if the async CostModelServer's req/s at concurrency 64
+fell below the serialized per-request baseline — i.e. if micro-batching
+stopped paying for itself. The paper-level target is >=3x; CI machines
+are noisy shared runners, so the gate only enforces >= the baseline
+(ratio 1.0 by default) and prints the measured ratio for the artifact
+trail.
+
+    python benchmarks/gate.py bench-artifacts/BENCH_serve_concurrent.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("record", help="path to BENCH_serve_concurrent.json")
+    ap.add_argument("--concurrency", default="64",
+                    help="which client-count level to gate on")
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="minimum req/s ratio over the serialized "
+                         "baseline (soft gate; local target is 3.0)")
+    args = ap.parse_args()
+    with open(args.record) as f:
+        rec = json.load(f)
+    result = rec["result"]
+    lvl = result["levels"][args.concurrency]
+    # matched-load serialized baseline (same client count); fall back to
+    # the single-thread reference for older records
+    base = lvl.get("serialized_req_s",
+                   result["serialized_baseline"]["req_s"])
+    ratio = lvl["req_s"] / base
+    print(f"serve_concurrent c{args.concurrency}: {lvl['req_s']:.0f} req/s "
+          f"vs serialized {base:.0f} req/s -> {ratio:.2f}x "
+          f"(gate: >= {args.min_ratio:.2f}x)")
+    if ratio < args.min_ratio:
+        print("PERF GATE FAILED: micro-batched serving is not beating "
+              "the serialized baseline", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

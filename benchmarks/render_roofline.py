@@ -1,6 +1,7 @@
 """Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
 
-    PYTHONPATH=src python -m benchmarks.render_roofline [--dir experiments/dryrun]
+    PYTHONPATH=src python -m benchmarks.render_roofline \
+        [--dir experiments/dryrun]
 """
 from __future__ import annotations
 

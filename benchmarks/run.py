@@ -11,10 +11,16 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
                       time (CPU proxy) + modeled HBM-traffic reduction.
   serve_bench       — unified multi-target service vs three single-target
                       services on the same request stream (req/s).
+  serve_concurrent  — async micro-batching CostModelServer under 1/8/64
+                      closed-loop clients vs serialized per-request
+                      predict_all (req/s + latency percentiles).
   roofline_table    — reads experiments/dryrun/*.json into the §Roofline
                       table (derived = roofline fraction).
 
 ``--full`` uses paper-scale settings (20k+ graphs); default is CI-scale.
+``--json-dir DIR`` additionally writes one ``BENCH_<name>.json`` record
+per bench (the CI bench-smoke job uploads these as artifacts, and
+``benchmarks/gate.py`` enforces the serve_concurrent perf gate on them).
 """
 from __future__ import annotations
 
@@ -22,14 +28,14 @@ import argparse
 import glob
 import json
 import os
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.costmodel import (COSTMODEL_BASE, COSTMODEL_OPERAND,
-                                     CostModelConfig)
+from repro.configs.costmodel import CostModelConfig
 from repro.core import models as CM
 from repro.core import trainer as TR
 from repro.ir import dataset as DS
@@ -134,8 +140,8 @@ def kernel_bench(full: bool = False, seed: int = 0):
     ids = jnp.asarray(rng.integers(1, 4096, (32, 256)), jnp.int32)
     mask = (ids != 0).astype(jnp.float32)
     x = params["emb"][ids] * mask[..., None]
-    ws = [l["w"] for l in params["convs"]]
-    bs = [l["b"] for l in params["convs"]]
+    ws = [lyr["w"] for lyr in params["convs"]]
+    bs = [lyr["b"] for lyr in params["convs"]]
     ref_fn = jax.jit(lambda x, m: REF.conv1d_stack_ref(x, ws, bs, m))
     us_ref = _bench(ref_fn, x, mask)
     _row("kernel_bench/xla_ref", us_ref, "unfused tower (6 HBM round trips)")
@@ -232,6 +238,175 @@ def serve_bench(full: bool = False, seed: int = 0):
     return out
 
 
+# ---------------------------------------------------------- serve_concurrent
+def serve_concurrent(full: bool = False, seed: int = 0):
+    """Async micro-batching gateway vs today's serialized serving, at
+    matched offered load.
+
+    At each concurrency level c, c closed-loop clients (each keeps
+    exactly one request outstanding, firing the next on completion)
+    push the same request stream through two serving designs:
+
+    * ``serialized`` — the synchronous service behind one lock: every
+      client's ``predict_all([g])`` is a whole batch-of-one forward
+      pass, one caller at a time (the pre-server state this PR's
+      motivation describes). Synchronous serving forces one OS thread
+      per client — that thread count is part of the design's cost.
+    * ``server`` — CostModelServer's native async API: clients are
+      future callbacks (``submit`` -> resolve -> next request), no
+      thread per client, and submissions coalesce into shared
+      per-bucket batched forward passes.
+
+    Weights are untrained (throughput does not depend on them); the LRU
+    is cleared before every timed run and the stream has no duplicate
+    graphs, so req/s measures forward-pass scheduling, not caching."""
+    from repro.core import tokenizer as TOK
+    from repro.core.server import CostModelServer
+    from repro.core.service import CostModelService
+    from repro.ir import samplers
+
+    n_req = 2048 if full else 384
+    max_batch = 64
+    if full:    # paper-scale: the best Conv1D topology from §4
+        cfg = CostModelConfig(name="serve-conc", vocab_size=4096,
+                              max_seq=160, embed_dim=64,
+                              conv_channels=(64,) * 6, fc_dims=(256, 64))
+    else:       # CI-scale: narrower tower, same serving pipeline
+        cfg = CostModelConfig(name="serve-conc", vocab_size=4096,
+                              max_seq=160, embed_dim=48,
+                              conv_filters=(2,) * 4,
+                              conv_channels=(48,) * 4, fc_dims=(128, 48))
+    rng = np.random.default_rng(seed)
+    graphs = [samplers.sample_graph(rng) for _ in range(n_req)]
+    vocab = TOK.fit_vocab([TOK.graph_tokens(g, "ops") for g in graphs],
+                          max_size=4096)
+    heads = CM.DEFAULT_HEADS
+    stats = {t: {"mu": 0.0, "sigma": 1.0} for t in heads}
+    svc = CostModelService(
+        "conv1d", cfg, CM.conv_init(jax.random.PRNGKey(seed), cfg,
+                                    heads=heads),
+        vocab, stats, mode="ops", max_seq=160, max_batch=max_batch)
+    svc.warmup()                       # AOT: no XLA compiles in timed runs
+
+    def clear():
+        with svc._cache_lock:
+            svc._cache.clear()
+
+    def drive_threads(conc, request_fn):
+        """Thread-per-client closed loop (the sync design's shape)."""
+        slices = [graphs[i::conc] for i in range(conc)]
+
+        def client(gs):
+            for g in gs:
+                request_fn(g)
+
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in slices]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.perf_counter() - t0
+
+    def drive_async(server, conc):
+        """Closed loop on the async API: conc logical clients, each one
+        outstanding ``submit`` whose completion callback consumes the
+        prediction and fires the next request. No thread per client."""
+        state_lock = threading.Lock()
+        state = {"next": 0, "outstanding": 0}
+        done = threading.Event()
+        errors = []
+        denorm = server.service.denormalize_rows
+
+        def fail(e):
+            errors.append(e)
+            done.set()                 # surface, never hang the bench
+
+        def pump():
+            while True:
+                with state_lock:
+                    i = state["next"]
+                    if i >= n_req:
+                        if state["outstanding"] == 0:
+                            done.set()
+                        return
+                    state["next"] = i + 1
+                    state["outstanding"] += 1
+                try:
+                    fut = server.submit(graphs[i])
+                except Exception as e:
+                    fail(e)
+                    return
+                if fut.done():         # cache-hit fast path: stay inline
+                    denorm(fut.result()[None])
+                    with state_lock:
+                        state["outstanding"] -= 1
+                    continue
+
+                def cb(f):
+                    try:
+                        denorm(f.result()[None])
+                        with state_lock:
+                            state["outstanding"] -= 1
+                        pump()
+                    except Exception as e:
+                        fail(e)
+
+                fut.add_done_callback(cb)
+                return
+
+        t0 = time.perf_counter()
+        for _ in range(conc):
+            pump()
+        done.wait(timeout=300)
+        if errors:
+            raise errors[0]
+        if not done.is_set():
+            raise TimeoutError("serve_concurrent clients stalled")
+        return time.perf_counter() - t0
+
+    serial_lock = threading.Lock()
+
+    def serialized_request(g):
+        with serial_lock:              # one forward pass at a time
+            svc.predict_all([g])
+
+    out = {"n_requests": n_req, "max_batch": max_batch, "levels": {}}
+    for conc in (1, 8, 64):
+        clear()
+        base_dt = drive_threads(conc, serialized_request)
+        base_req_s = n_req / base_dt
+
+        clear()
+        server = CostModelServer(svc, max_batch=max_batch, flush_us=2000)
+        server.start(warmup=False)     # service programs already warm
+        dt = drive_async(server, conc)
+        m = server.metrics.snapshot(server.queue_depth())
+        server.stop()
+        req_s = n_req / dt
+        lvl = {"req_s": req_s, "serialized_req_s": base_req_s,
+               "speedup_vs_serialized": req_s / base_req_s,
+               "p50_us": m["latency_p50_us"], "p95_us": m["latency_p95_us"],
+               "p99_us": m["latency_p99_us"],
+               "batch_occupancy": m["batch_occupancy"],
+               "full_flushes": m["full_flushes"],
+               "deadline_flushes": m["deadline_flushes"],
+               "stagnant_flushes": m["stagnant_flushes"]}
+        out["levels"][str(conc)] = lvl
+        _row(f"serve_concurrent/serialized_c{conc}",
+             base_dt / n_req * 1e6, f"req_s={base_req_s:.0f}")
+        _row(f"serve_concurrent/server_c{conc}", dt / n_req * 1e6,
+             f"req_s={req_s:.0f};speedup={req_s / base_req_s:.2f}x"
+             f";occupancy={m['batch_occupancy']:.1f}"
+             f";p50_ms={m['latency_p50_us'] / 1e3:.2f}"
+             f";p99_ms={m['latency_p99_us'] / 1e3:.2f}")
+    # legacy single-thread reference == serialized_c1
+    out["serialized_baseline"] = {
+        "req_s": out["levels"]["1"]["serialized_req_s"]}
+    return out
+
+
 # --------------------------------------------------------------- train_bench
 def train_bench(full: bool = False, seed: int = 0):
     """TrainEngine bucketed batching vs max_seq padding on a mixed-length
@@ -311,10 +486,26 @@ BENCHES = {
     "inference_speed": inference_speed,
     "kernel_bench": kernel_bench,
     "serve_bench": serve_bench,
+    "serve_concurrent": serve_concurrent,
     "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,
 }
+
+
+def _jsonable(x):
+    """Benchmark returns -> JSON: tuple keys become strings, numpy
+    scalars/arrays become python numbers/lists."""
+    if isinstance(x, dict):
+        return {"/".join(k) if isinstance(k, tuple) else str(k):
+                _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (np.integer, np.floating, np.bool_)):
+        return x.item()
+    return x
 
 
 def main() -> None:
@@ -322,13 +513,24 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
     ap.add_argument("--full", action="store_true",
                     help="paper-scale dataset/steps (slow)")
+    ap.add_argument("--json-dir", default=None,
+                    help="write one BENCH_<name>.json record per bench "
+                         "run (CI uploads these as workflow artifacts)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
-        fn(full=args.full, seed=args.seed)
+        result = fn(full=args.full, seed=args.seed)
+        if args.json_dir:
+            os.makedirs(args.json_dir, exist_ok=True)
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"bench": name, "full": args.full,
+                           "seed": args.seed,
+                           "result": _jsonable(result)}, f, indent=2)
+            print(f"# wrote {path}", flush=True)
 
 
 if __name__ == '__main__':

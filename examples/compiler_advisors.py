@@ -1,22 +1,28 @@
 """Compiler-in-the-loop demo: ONE deployed multi-target cost model drives
-fusion, unroll, and recompile decisions (the paper's §1 motivation).
+fusion, unroll, and recompile decisions (the paper's §1 motivation) —
+served through the async micro-batching CostModelServer, the way a
+multi-threaded compiler would reach it.
 
-Every advisor shares the same CostModelService: a single encoder forward
-pass per candidate graph yields register pressure, vALU utilization, and
-latency together, and the service's LRU cache is shared across advisors —
-a graph costed during fusion search is free during unroll search.
+Every advisor shares the same gateway: a single encoder forward pass per
+candidate graph yields register pressure, vALU utilization, and latency
+together; requests from concurrent compile threads coalesce into shared
+batched forward passes; and the LRU cache behind the server is shared
+across advisors — a graph costed during fusion search is free during
+unroll search.
 
     PYTHONPATH=src python examples/compiler_advisors.py
 """
 import numpy as np
 
 from repro.configs.costmodel import CostModelConfig
+from repro.core import augment as AUG
 from repro.core import models as CM
 from repro.core import trainer as TR
+from repro.core.server import CostModelServer
 from repro.core.service import (CostModelService, FusionAdvisor,
                                 RecompileAdvisor, UnrollAdvisor)
-from repro.core import augment as AUG
-from repro.ir import dataset as DS, samplers
+from repro.ir import dataset as DS
+from repro.ir import samplers
 
 
 def main(n_graphs=900, train_steps=300, seed=0):
@@ -36,28 +42,35 @@ def main(n_graphs=900, train_steps=300, seed=0):
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160)
-    fusion = FusionAdvisor(svc)
-    unroll = UnrollAdvisor(svc, register_budget=64)
-    recompile = RecompileAdvisor(svc)
+    with CostModelServer(svc, max_batch=32, flush_us=2000) as server:
+        fusion = FusionAdvisor(server)
+        unroll = UnrollAdvisor(server, register_budget=64)
+        recompile = RecompileAdvisor(server)
 
-    rng = np.random.default_rng(seed + 1)
-    g = samplers.sample_graph(rng, "resnet")
-    costs = svc.predict_all([g])
-    print("one forward pass, all characteristics:",
-          {t: round(float(v[0]), 2) for t, v in costs.items()})
+        rng = np.random.default_rng(seed + 1)
+        g = samplers.sample_graph(rng, "resnet")
+        costs = server.predict_all([g])
+        print("one forward pass, all characteristics:",
+              {t: round(float(v[0]), 2) for t, v in costs.items()})
 
-    do_fuse, c0, c1 = fusion.advise(g)
-    print(f"fusion advisor: fuse={do_fuse} "
-          f"(unfused={c0:.1f}us fused={c1:.1f}us)")
-    adv = unroll.advise(g)
-    print(f"unroll advisor: best_factor={adv['best_factor']} "
-          f"per-iter latency="
-          f"{ {k: round(v, 1) for k, v in adv['per_iter_latency'].items()} }")
-    g2 = AUG.jitter_shapes(g, rng)
-    dec = recompile.advise(g, g2)
-    print(f"recompile advisor: recompile={dec['recompile']} "
-          f"shift={dec['shift']:.1%}")
-    print(f"cache after session: {len(svc._cache)} entries "
+        do_fuse, c0, c1 = fusion.advise(g)
+        print(f"fusion advisor: fuse={do_fuse} "
+              f"(unfused={c0:.1f}us fused={c1:.1f}us)")
+        adv = unroll.advise(g)
+        per_iter = {k: round(v, 1)
+                    for k, v in adv['per_iter_latency'].items()}
+        print(f"unroll advisor: best_factor={adv['best_factor']} "
+              f"per-iter latency={per_iter}")
+        g2 = AUG.jitter_shapes(g, rng)
+        dec = recompile.advise(g, g2)
+        print(f"recompile advisor: recompile={dec['recompile']} "
+              f"shift={dec['shift']:.1%}")
+        m = server.metrics.snapshot()
+        print(f"server session: {m['requests']} requests, "
+              f"{m['batches']} batched forward passes "
+              f"(occupancy {m['batch_occupancy']:.1f}), "
+              f"cache_hit_rate={m['cache_hit_rate']:.1%}")
+    print(f"cache after session: {svc.cache_stats()['size']} entries "
           f"(bound {svc.cache_size})")
 
 

@@ -1,7 +1,8 @@
 """Train a reduced assigned-architecture LM end-to-end on synthetic data —
 exercises the zoo + optimizer + pipeline + checkpointing together.
 
-    PYTHONPATH=src python examples/train_lm_smoke.py --arch qwen3-0.6b --steps 30
+    PYTHONPATH=src python examples/train_lm_smoke.py \
+        --arch qwen3-0.6b --steps 30
 """
 import argparse
 import time

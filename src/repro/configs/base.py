@@ -7,7 +7,7 @@ exact copies of the published numbers (see per-arch modules in this package).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 
@@ -105,7 +105,8 @@ class ArchConfig:
         for layer in range(self.n_layers):
             is_attn = True
             if self.hybrid is not None:
-                is_attn = (layer % self.hybrid.period) == self.hybrid.attn_index
+                is_attn = ((layer % self.hybrid.period)
+                           == self.hybrid.attn_index)
             if is_attn:
                 total += attn
             elif self.hybrid is not None:
@@ -129,7 +130,8 @@ class ArchConfig:
         total += d                        # final norm
         if self.encoder_decoder:
             enc_attn = attn
-            enc = self.n_encoder_layers * (enc_attn + dense_ffn + per_layer_norms)
+            enc = self.n_encoder_layers * (
+                enc_attn + dense_ffn + per_layer_norms)
             cross = self.n_layers * (attn + d)  # cross-attn per decoder layer
             total += enc + cross
         return int(total)
@@ -139,10 +141,11 @@ class ArchConfig:
         if self.moe is None:
             return self.param_count()
         full = self.param_count()
-        moe_layers = sum(1 for l in range(self.n_layers)
-                         if (l % self.moe.moe_every) == 0)
+        moe_layers = sum(1 for i in range(self.n_layers)
+                         if (i % self.moe.moe_every) == 0)
         expert_p = 3 * self.d_model * self.moe.d_ff_expert
-        inactive = moe_layers * (self.moe.n_experts - self.moe.top_k) * expert_p
+        inactive = (moe_layers * expert_p
+                    * (self.moe.n_experts - self.moe.top_k))
         return int(full - inactive)
 
     def reduced(self) -> "ArchConfig":
@@ -152,12 +155,14 @@ class ArchConfig:
                          (self.hybrid.period if self.hybrid else 2)),
             d_model=64,
             n_heads=4,
-            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            n_kv_heads=(min(self.n_kv_heads, 2)
+                        if self.n_kv_heads < self.n_heads else 4),
             d_ff=128 if self.d_ff else 0,
             vocab=256,
             head_dim=16,
             encoder_seq=8 if self.encoder_decoder else self.encoder_seq,
-            vision_patches=8 if self.frontend == "vision" else self.vision_patches,
+            vision_patches=(8 if self.frontend == "vision"
+                            else self.vision_patches),
             n_encoder_layers=min(self.n_encoder_layers, 2),
         )
         if self.moe is not None:

@@ -8,7 +8,7 @@ the base model (matching the embedding width) and note this in DESIGN.md.
 ``COSTMODEL_100M`` is the scaled config used by the end-to-end training
 driver (examples/train_costmodel_100m.py): same topology, wide channels.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 
@@ -20,7 +20,8 @@ class CostModelConfig:
     embed_dim: int = 64
     conv_filters: Tuple[int, ...] = (2, 2, 2, 2, 2, 2)       # ops-only (Fig 5)
     conv_channels: Tuple[int, ...] = (64, 64, 64, 64, 64, 64)
-    fc_dims: Tuple[int, ...] = (256, 64)  # two hidden FC; final scalar head = 3rd
+    # two hidden FC; the final scalar head is the 3rd
+    fc_dims: Tuple[int, ...] = (256, 64)
     lstm_hidden: int = 128
     dropout: float = 0.0
     dtype: str = "float32"

@@ -1,4 +1,5 @@
-"""llava-next-34b [vlm] — anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]."""
+"""llava-next-34b [vlm] — anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]."""
 from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(

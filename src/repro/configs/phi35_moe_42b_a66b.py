@@ -1,4 +1,5 @@
-"""phi3.5-moe-42b-a6.6b [moe] — 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf]."""
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]."""
 from repro.configs.base import ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(

@@ -1,4 +1,5 @@
-"""whisper-small [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified]."""
+"""whisper-small [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356; unverified]."""
 from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(

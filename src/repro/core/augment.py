@@ -18,7 +18,7 @@ from typing import List
 
 import numpy as np
 
-from repro.ir.graph import Graph, Op, Tensor
+from repro.ir.graph import Graph, Tensor
 
 
 def rename_operands(g: Graph, rng: np.random.Generator) -> Graph:

@@ -26,6 +26,7 @@ while compiling in order to make the best decisions." This module provides:
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -35,7 +36,6 @@ import numpy as np
 
 from repro.core import models as CM
 from repro.core import tokenizer as TOK
-from repro.ir import dataset as DS
 from repro.ir.graph import Graph
 
 
@@ -74,6 +74,13 @@ class CostModelService:
     target: Optional[str] = None
     cache_size: int = 4096
     buckets: Optional[Tuple[int, ...]] = None   # None -> power-of-two ladder
+    # batch sizes forward passes are padded up to (None -> power-of-two
+    # ladder capped at max_batch). Fixing the set of executed (B, S)
+    # shapes keeps the XLA program count finite — warmup() can pre-compile
+    # all of them — and makes per-row results independent of how requests
+    # were packed into batches (rows are data-parallel), so coalesced
+    # server batches reproduce direct per-request predictions bit-for-bit.
+    batch_ladder: Optional[Tuple[int, ...]] = None
     # content-hash -> (n_heads,) normalized prediction vector, LRU-ordered
     _cache: "OrderedDict[str, np.ndarray]" = field(
         default_factory=OrderedDict)
@@ -81,7 +88,22 @@ class CostModelService:
 
     def __post_init__(self):
         _, apply_fn, _ = CM.get_model(self.kind)
-        self._apply = jax.jit(apply_fn)
+        # Bake small (fixed, inference-only) params into the jitted
+        # callable as constants: per-call python then processes ONE ids
+        # array instead of flattening the whole param tree, which is
+        # most of a small model's dispatch latency on the serving hot
+        # path (and all of it is per-request for a batch-of-one caller).
+        # Constants are duplicated into every compiled (bucket x ladder)
+        # program, so big param trees are committed to device once and
+        # passed as an argument instead.
+        params = self.params
+        n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
+        if n_bytes <= 16 * 2**20:
+            self._apply = jax.jit(lambda ids: apply_fn(params, ids))
+        else:
+            dev_params = jax.device_put(params)
+            jitted = jax.jit(apply_fn)
+            self._apply = lambda ids: jitted(dev_params, ids)
         self.heads = CM.model_heads(self.params) or (
             self.target or "prediction",)
         self._multi = CM.model_heads(self.params) is not None
@@ -90,6 +112,39 @@ class CostModelService:
         self.buckets = tuple(sorted(b for b in self.buckets
                                     if b <= self.max_seq)) or (self.max_seq,)
         self._pad_slack = pad_slack(self.kind, self.cfg)
+        if self.batch_ladder is None:
+            # powers of two plus midpoints (1,2,3,4,6,8,12,...): padding
+            # waste stays under 33% at any coalesced-batch occupancy
+            ladder = set()
+            b = 1
+            while b < self.max_batch:
+                ladder.add(b)
+                if b * 3 // 2 < self.max_batch:
+                    ladder.add(b * 3 // 2)
+                b *= 2
+            ladder.add(self.max_batch)
+            self.batch_ladder = tuple(sorted(ladder))
+        self.batch_ladder = tuple(sorted(
+            b for b in self.batch_ladder if b <= self.max_batch)) or (
+            self.max_batch,)
+        if self.batch_ladder[-1] < self.max_batch:
+            # the ladder must cover max_batch: _forward pads UP to a
+            # ladder entry, and chunks can be as large as max_batch
+            self.batch_ladder += (self.max_batch,)
+        # One lock guards the LRU dict and its hit/miss counters: the
+        # CostModelServer worker and direct callers share this service
+        # from multiple threads.
+        self._cache_lock = threading.Lock()
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # per-head (mu, sigma) as vectors: denormalizing all heads of a
+        # row block is one vectorized expm1, not one call per target
+        # float32 so block denorm rounds exactly like the per-target
+        # scalar path (float32 rows * python-float stats -> float32)
+        self._mu_vec = np.asarray(
+            [self._stats_for(t)["mu"] for t in self.heads], np.float32)
+        self._sigma_vec = np.asarray(
+            [self._stats_for(t)["sigma"] for t in self.heads], np.float32)
 
     # ------------------------------------------------------------- encoding
     def _bucket_len(self, n_tokens: int) -> int:
@@ -103,29 +158,141 @@ class CostModelService:
         toks = TOK.graph_tokens(g, self.mode)
         return self.vocab.encode(toks, self._bucket_len(len(toks)))
 
+    def entry(self, g: Graph) -> Tuple[str, np.ndarray]:
+        """Batch entry for one graph: (content hash, bucket-padded ids).
+
+        The hash keys the LRU cache; ``len(ids)`` is the bucket, which a
+        coalescing server uses to route the entry onto a queue of
+        same-shape requests."""
+        ids = self._encode(g)
+        return hashlib.sha1(ids.tobytes()).hexdigest(), ids
+
     def _stats_for(self, t: str) -> Dict[str, float]:
         return self.norm_stats[t] if self._multi else self.norm_stats
 
+    def denormalize_rows(self, raw: np.ndarray) -> Dict[str, np.ndarray]:
+        """(N, n_heads) normalized rows -> {target: (N,) denormalized}.
+
+        One vectorized expm1 over the whole block; numerically identical
+        to per-target ``DS.denormalize`` (same ops, same dtype path)."""
+        den = np.expm1(raw * self._sigma_vec + self._mu_vec)
+        return {t: den[:, i] for i, t in enumerate(self.heads)}
+
     # ------------------------------------------------------------ inference
-    def _cache_get(self, h: str) -> Optional[np.ndarray]:
-        v = self._cache.get(h)
-        if v is not None:
-            self._cache.move_to_end(h)
+    def cache_lookup(self, h: str) -> Optional[np.ndarray]:
+        """Thread-safe LRU probe; counts a hit or a miss."""
+        with self._cache_lock:
+            v = self._cache.get(h)
+            if v is not None:
+                self._cache.move_to_end(h)
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
         return v
 
-    def _cache_put(self, h: str, v: np.ndarray) -> None:
-        self._cache[h] = v
-        self._cache.move_to_end(h)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
+    def _cache_put_many(
+            self, items: Sequence[Tuple[str, np.ndarray]]) -> None:
+        """Insert a whole flushed batch under one lock acquisition."""
+        with self._cache_lock:
+            for h, v in items:
+                self._cache[h] = v
+                self._cache.move_to_end(h)
+            while len(self._cache) > self.cache_size:
+                self._cache.popitem(last=False)
 
-    def _forward(self, ids: np.ndarray) -> np.ndarray:
-        """One batched forward pass -> (B, n_heads) normalized predictions."""
-        out = self._apply(self.params, ids)
+    def cache_stats(self) -> Dict[str, float]:
+        with self._cache_lock:
+            hits, misses = self.cache_hits, self.cache_misses
+            size = len(self._cache)
+        total = hits + misses
+        return {"hits": hits, "misses": misses, "size": size,
+                "hit_rate": hits / total if total else 0.0}
+
+    def _ladder_batch(self, n: int) -> int:
+        for b in self.batch_ladder:
+            if n <= b:
+                return b
+        return self.batch_ladder[-1]
+
+    def forward_dispatch(self, ids: np.ndarray) -> Tuple[Any, int]:
+        """Enqueue one batched forward pass on the device WITHOUT waiting
+        (JAX dispatch is async) and return an opaque handle for
+        :meth:`forward_collect`. Pads the batch dim up to the ladder with
+        all-PAD rows (sliced off at collect), so only |batch_ladder| x
+        |buckets| programs ever compile."""
+        n = ids.shape[0]
+        nb = self._ladder_batch(n)
+        if nb != n:
+            ids = np.concatenate(
+                [ids, np.zeros((nb - n, ids.shape[1]), ids.dtype)])
+        return self._apply(ids), n
+
+    def forward_collect(self, handle: Tuple[Any, int]) -> np.ndarray:
+        """Wait for a dispatched forward pass -> (B, n_heads) normalized
+        predictions (padding rows removed)."""
+        out, n = handle
         if self._multi:
             out = jax.device_get(out)
-            return np.stack([np.asarray(out[t]) for t in self.heads], axis=1)
-        return np.asarray(out)[:, None]
+            rows = np.stack([np.asarray(out[t]) for t in self.heads], axis=1)
+        else:
+            rows = np.asarray(out)[:, None]
+        return rows[:n]
+
+    def _forward(self, ids: np.ndarray) -> np.ndarray:
+        """One synchronous batched forward -> (B, n_heads) rows."""
+        return self.forward_collect(self.forward_dispatch(ids))
+
+    def forward_entries(
+            self, entries: Sequence[Tuple[str, np.ndarray]]) -> np.ndarray:
+        """Forward a coalesced batch of same-bucket entries -> (N, n_heads)
+        normalized rows, inserted into the LRU under each entry's hash.
+
+        This is predict_all's compute kernel, split out so an async server
+        can drive it with batches merged from many concurrent clients.
+        Entries must share one ids length (one bucket); batches larger
+        than max_batch are chunked."""
+        hs = [h for h, _ in entries]
+        ids = np.stack([i for _, i in entries])
+        rows = []
+        for i in range(0, len(ids), self.max_batch):
+            preds = self._forward(ids[i:i + self.max_batch])
+            self._cache_put_many(
+                list(zip(hs[i:i + self.max_batch], preds)))
+            rows.append(preds)
+        return np.concatenate(rows)
+
+    def forward_entries_dispatch(
+            self, entries: Sequence[Tuple[str, np.ndarray]]):
+        """Async variant of :meth:`forward_entries`: enqueue the forward
+        pass and return a handle for :meth:`forward_entries_collect`.
+        The batch must fit one forward pass (len(entries) <= max_batch);
+        the cache is populated at collect time."""
+        if len(entries) > self.max_batch:
+            raise ValueError(
+                f"async batch of {len(entries)} exceeds "
+                f"max_batch={self.max_batch}")
+        ids = np.stack([i for _, i in entries])
+        return self.forward_dispatch(ids), [h for h, _ in entries]
+
+    def forward_entries_collect(self, handle) -> np.ndarray:
+        fwd, hs = handle
+        preds = self.forward_collect(fwd)
+        self._cache_put_many(list(zip(hs, preds)))
+        return preds
+
+    def warmup(self, batch_sizes: Optional[Sequence[int]] = None,
+               buckets: Optional[Sequence[int]] = None) -> int:
+        """AOT-compile every (bucket x ladder-batch) jitted program so no
+        caller pays first-request XLA compile latency. Returns the number
+        of programs warmed."""
+        n = 0
+        for s in (buckets if buckets is not None else self.buckets):
+            for b in (batch_sizes if batch_sizes is not None
+                      else self.batch_ladder):
+                jax.block_until_ready(
+                    self._apply(np.zeros((b, s), np.int32)))
+                n += 1
+        return n
 
     def predict_all(self, graphs: Sequence[Graph]) -> Dict[str, np.ndarray]:
         """All targets for every graph from one cached, batched, bucketed
@@ -136,12 +303,11 @@ class CostModelService:
         vals: Dict[str, np.ndarray] = {}   # this call's working set: the
         missing: Dict[str, np.ndarray] = {}  # LRU may evict entries mid-call
         for g in graphs:
-            ids = self._encode(g)
-            h = hashlib.sha1(ids.tobytes()).hexdigest()
+            h, ids = self.entry(g)
             keys.append(h)
             if h in vals or h in missing:
                 continue
-            hit = self._cache_get(h)
+            hit = self.cache_lookup(h)
             if hit is not None:
                 vals[h] = hit
             else:
@@ -152,17 +318,11 @@ class CostModelService:
             for h, ids in missing.items():
                 by_len.setdefault(len(ids), []).append((h, ids))
             for _, group in sorted(by_len.items()):
-                hs = [h for h, _ in group]
-                ids = np.stack([i for _, i in group])
-                for i in range(0, len(ids), self.max_batch):
-                    chunk = ids[i:i + self.max_batch]
-                    preds = self._forward(chunk)
-                    for hh, p in zip(hs[i:i + self.max_batch], preds):
-                        vals[hh] = p
-                        self._cache_put(hh, p)
+                preds = self.forward_entries(group)
+                for (hh, _), p in zip(group, preds):
+                    vals[hh] = p
         raw = np.stack([vals[k] for k in keys])  # (N, n_heads)
-        return {t: DS.denormalize(raw[:, i], self._stats_for(t))
-                for i, t in enumerate(self.heads)}
+        return self.denormalize_rows(raw)
 
     def resolve_target(self, target: Optional[str]) -> str:
         """Map a requested target onto this service's heads.
@@ -175,7 +335,8 @@ class CostModelService:
         if target in self.heads:
             return target
         if len(self.heads) == 1 and (
-                target is None or self._multi is False and self.target is None):
+                target is None
+                or self._multi is False and self.target is None):
             return self.heads[0]
         if target is None:
             raise ValueError(

@@ -20,7 +20,7 @@ import json
 import re
 from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Sequence
 
 import numpy as np
 
@@ -31,7 +31,8 @@ SPECIALS = [PAD, UNK, BOS, EOS, SEP]
 
 _TEXT_TOKEN_RE = re.compile(
     r"%[A-Za-z0-9_]+|\"[a-z_]+\.[a-z0-9_.]+\"|[a-z_]+\.[a-z0-9_.]+"
-    r"|tensor<[^>]*>|\d+x[0-9x]*(?:f32|bf16|f16|i8|i32)|[A-Za-z_][A-Za-z0-9_]*")
+    r"|tensor<[^>]*>|\d+x[0-9x]*(?:f32|bf16|f16|i8|i32)"
+    r"|[A-Za-z_][A-Za-z0-9_]*")
 
 
 def graph_tokens(g: Graph, mode: str = "ops") -> List[str]:

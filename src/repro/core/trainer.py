@@ -195,7 +195,7 @@ class TrainEngine:
             rules = ShardingRules(mesh)
             axes = self.axes_fn(self.cfg, heads=self.heads) if self.heads \
                 else self.axes_fn(self.cfg)
-            shapes = jax.tree.map(lambda l: l.shape, params)
+            shapes = jax.tree.map(lambda x: x.shape, params)
             params = jax.tree.map(jax.device_put, params,
                                   tree_shardings(rules, axes, shapes))
 

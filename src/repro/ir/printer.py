@@ -2,9 +2,12 @@
 
 Example output::
 
-    func.func @graph(%arg0: tensor<8x224x224x3xf32>) -> tensor<8x112x112x64xf32> {
-      %0 = "xpu.conv2d"(%arg0) : (tensor<8x224x224x3xf32>) -> tensor<8x112x112x64xf32>
-      %1 = "xpu.relu"(%0) : (tensor<8x112x112x64xf32>) -> tensor<8x112x112x64xf32>
+    func.func @graph(%arg0: tensor<8x224x224x3xf32>)
+        -> tensor<8x112x112x64xf32> {
+      %0 = "xpu.conv2d"(%arg0) : (tensor<8x224x224x3xf32>)
+          -> tensor<8x112x112x64xf32>
+      %1 = "xpu.relu"(%0) : (tensor<8x112x112x64xf32>)
+          -> tensor<8x112x112x64xf32>
       return %1 : tensor<8x112x112x64xf32>
     }
 """

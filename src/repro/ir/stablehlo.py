@@ -12,7 +12,7 @@ Graph sources: per-layer subgraphs of the assigned LM architectures
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

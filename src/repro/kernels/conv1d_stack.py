@@ -22,12 +22,11 @@ VMEM budget per grid step (defaults: bblk=8, S<=1024, C<=128 fp32):
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import numpy as np
 
 
 def _kernel(x_ref, mask_ref, *refs, n_layers: int, filter_sizes, out_dtype):

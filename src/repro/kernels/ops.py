@@ -34,8 +34,8 @@ def conv_tower_apply(params, ids, *, use_kernel: bool = True,
     """Drop-in for core.models.conv_apply using the fused kernel."""
     mask = (ids != 0).astype(jnp.float32)
     x = params["emb"][ids] * mask[..., None]
-    weights = [l["w"] for l in params["convs"]]
-    biases = [l["b"] for l in params["convs"]]
+    weights = [lyr["w"] for lyr in params["convs"]]
+    biases = [lyr["b"] for lyr in params["convs"]]
     if use_kernel:
         h = conv1d_stack(x, weights, biases, mask, interpret=interpret)
     else:

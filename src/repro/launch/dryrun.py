@@ -129,8 +129,9 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             if grad_bf16:
                 # bf16 gradients on the wire (the DP all-reduce payload
                 # halves); optimizer math stays fp32
-                gt = lambda g: jax.tree.map(
-                    lambda x: x.astype(jnp.bfloat16), g)
+                def gt(g):
+                    return jax.tree.map(
+                        lambda x: x.astype(jnp.bfloat16), g)
             step = STEPS.make_train_step(cfg, opt_cfg, rules=rules,
                                          remat=remat, grad_transform=gt)
             jitted = jax.jit(step,
@@ -189,7 +190,9 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
               f"t=({report.t_compute*1e3:.2f},{report.t_memory*1e3:.2f},"
               f"{report.t_collective*1e3:.2f})ms "
               f"roofline={report.roofline_fraction:.2%}")
-        print(f"  memory_analysis: { {k: f'{v/2**30:.2f}GiB' for k, v in mem.items() if 'size' in k} }")
+        sizes = {k: f'{v/2**30:.2f}GiB'
+                 for k, v in mem.items() if 'size' in k}
+        print(f"  memory_analysis: {sizes}")
     return record
 
 

@@ -1,36 +1,96 @@
-"""Batched inference server driver for the deployed cost model.
+"""Async micro-batching inference gateway for the deployed cost model.
 
-Simulates the DL-compiler's usage pattern: bursts of small prediction
-requests (one per candidate transformation) that the service batches,
-buckets by sequence length, caches (bounded LRU), and answers. One
-multi-head service predicts every hardware characteristic — register
-pressure, vALU utilization, latency — from a single encoder forward
-pass. Prints throughput and cache statistics.
+Simulates the DL-compiler's real usage pattern: many concurrent clients
+(one per compile thread doing fusion/unroll/recompile search), each
+issuing bursts of small prediction requests. The CostModelServer merges
+them into coalesced per-bucket batches (flush on full batch or a
+deadline), answers LRU-cached repeats at submit time, and pre-compiles
+every (bucket x batch-ladder) XLA program at startup. One multi-head
+service predicts every hardware characteristic — register pressure,
+vALU utilization, latency — from a single encoder forward pass.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 2000
+    PYTHONPATH=src python -m repro.launch.serve --requests 2000 \
+        --concurrency 16 --flush-us 2000
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
 
 from repro.configs.costmodel import CostModelConfig
+from repro.core import augment as AUG
 from repro.core import models as CM
 from repro.core import trainer as TR
+from repro.core.server import CostModelServer
 from repro.core.service import (CostModelService, FusionAdvisor,
                                 RecompileAdvisor, UnrollAdvisor)
-from repro.core import augment as AUG
-from repro.ir import dataset as DS, samplers
+from repro.ir import dataset as DS
+from repro.ir import samplers
+
+
+def run_clients(server: CostModelServer, graphs, concurrency: int) -> float:
+    """Closed-loop clients: each thread owns a slice of the request
+    stream and submits its next request as soon as the previous one
+    resolves. Returns wall seconds for the whole stream."""
+    slices = [graphs[i::concurrency] for i in range(concurrency)]
+    errs = []
+
+    def client(gs):
+        try:
+            for g in gs:
+                server.predict_all([g])
+        except Exception as e:          # surface, don't hang the driver
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(s,)) for s in slices]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    return dt
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=500)
-    ap.add_argument("--train-steps", type=int, default=400)
-    ap.add_argument("--n-graphs", type=int, default=1500)
-    ap.add_argument("--cache-size", type=int, default=4096)
+    ap = argparse.ArgumentParser(
+        description="Train a small multi-target cost model, then serve it "
+                    "through the async micro-batching CostModelServer "
+                    "under closed-loop concurrent clients.",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    ap.add_argument("--requests", type=int, default=500,
+                    help="total prediction requests across all clients "
+                         "(stream has ~50%% repeated graphs, like a "
+                         "compiler re-querying modified candidates)")
+    ap.add_argument("--concurrency", type=int, default=8,
+                    help="closed-loop client threads submitting "
+                         "concurrently; their requests coalesce into "
+                         "shared batched forward passes")
+    ap.add_argument("--flush-us", type=float, default=2000.0,
+                    help="micro-batch flush deadline in microseconds: a "
+                         "partially-filled bucket queue is flushed once "
+                         "its oldest request has waited this long")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="flush a bucket queue as soon as it holds this "
+                         "many unique requests (full-batch path)")
+    ap.add_argument("--max-queue", type=int, default=4096,
+                    help="bound on queued entries across all buckets; "
+                         "beyond it submits fail fast with "
+                         "ServerOverloadedError (load shed)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip AOT pre-compilation of the (bucket x "
+                         "batch-ladder) XLA programs at startup")
+    ap.add_argument("--train-steps", type=int, default=400,
+                    help="training steps for the demo model")
+    ap.add_argument("--n-graphs", type=int, default=1500,
+                    help="synthetic training-set size")
+    ap.add_argument("--cache-size", type=int, default=4096,
+                    help="LRU prediction-cache bound (unique graphs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,8 +112,23 @@ def main():
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160,
                            cache_size=args.cache_size)
-    print(f"service heads={list(svc.heads)} buckets={list(svc.buckets)} "
-          f"cache_bound={svc.cache_size}")
+    server = CostModelServer(svc, max_batch=args.max_batch,
+                             flush_us=args.flush_us,
+                             max_queue=args.max_queue)
+    t0 = time.perf_counter()
+    server.start(warmup=not args.no_warmup)
+    try:
+        run_session(server, svc, args, time.perf_counter() - t0)
+    finally:
+        server.stop()                  # fail leftover futures on error
+    print(f"cache after session: {svc.cache_stats()['size']} unique "
+          f"entries")
+
+
+def run_session(server: CostModelServer, svc: CostModelService, args,
+                warmup_s: float) -> None:
+    print(f"server up: heads={list(svc.heads)} buckets={list(svc.buckets)} "
+          f"batch_ladder={list(svc.batch_ladder)} warmup={warmup_s:.2f}s")
 
     rng = np.random.default_rng(args.seed + 1)
     graphs = [samplers.sample_graph(rng) for _ in range(args.requests // 2)]
@@ -61,29 +136,35 @@ def main():
     graphs = graphs + [g for g in graphs]
     rng.shuffle(graphs)
 
-    t0 = time.time()
-    preds = svc.predict_all(graphs)
-    dt = time.time() - t0
+    dt = run_clients(server, graphs, args.concurrency)
+    m = server.metrics.snapshot(server.queue_depth())
     n_targets = len(svc.heads)
     print(f"served {len(graphs)} requests x {n_targets} targets in "
-          f"{dt:.2f}s ({len(graphs)/dt:.0f} req/s, "
-          f"{len(graphs)*n_targets/dt:.0f} predictions/s, "
-          f"cache={len(svc._cache)} unique)")
-    lat = preds["latency_us"]
-    print(f"predicted latency: p50={np.median(lat):.1f}us "
-          f"max={lat.max():.1f}us")
+          f"{dt:.2f}s ({len(graphs) / dt:.0f} req/s, "
+          f"{len(graphs) * n_targets / dt:.0f} predictions/s) "
+          f"at concurrency {args.concurrency}")
+    print(f"  batches={m['batches']} occupancy={m['batch_occupancy']:.1f} "
+          f"full={m['full_flushes']} deadline={m['deadline_flushes']}")
+    print(f"  latency p50={m['latency_p50_us'] / 1e3:.2f}ms "
+          f"p95={m['latency_p95_us'] / 1e3:.2f}ms "
+          f"p99={m['latency_p99_us'] / 1e3:.2f}ms")
+    print(f"  cache_hit_rate={m['cache_hit_rate']:.1%} "
+          f"coalesced={m['coalesced']} shed={m['shed']} "
+          f"max_queue_depth={m['max_queue_depth']}")
 
-    fusion = FusionAdvisor(svc)
-    unroll = UnrollAdvisor(svc, register_budget=64)
-    recompile = RecompileAdvisor(svc)
+    # the advisors drive the SAME gateway (duck-typed service API)
+    fusion = FusionAdvisor(server)
+    unroll = UnrollAdvisor(server, register_budget=64)
+    recompile = RecompileAdvisor(server)
 
     g = samplers.sample_graph(rng, "resnet")
     do_fuse, c0, c1 = fusion.advise(g)
     print(f"fusion advisor: fuse={do_fuse} "
           f"(unfused={c0:.1f}us fused={c1:.1f}us)")
     adv = unroll.advise(g)
+    per_iter = {k: round(v, 1) for k, v in adv['per_iter_latency'].items()}
     print(f"unroll advisor: best_factor={adv['best_factor']} "
-          f"per-iter latency={ {k: round(v,1) for k, v in adv['per_iter_latency'].items()} }")
+          f"per-iter latency={per_iter}")
     g2 = AUG.jitter_shapes(g, rng)
     dec = recompile.advise(g, g2)
     print(f"recompile advisor: recompile={dec['recompile']} "

@@ -14,9 +14,7 @@ Conventions
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -120,7 +118,7 @@ def flash_attention(q, k, v, *, causal: bool, q_offset=0,
         return rules.constrain(x, *axes) if rules is not None else x
 
     def step(carry, inputs):
-        m, l, acc, blk_idx = carry
+        m, lse, acc, blk_idx = carry
         kc, vc = inputs
         k_pos = blk_idx * kblk + jnp.arange(kblk)
         logits = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
@@ -133,7 +131,7 @@ def flash_attention(q, k, v, *, causal: bool, q_offset=0,
         m_new = jnp.maximum(m, logits.max(axis=-1))
         p = jnp.exp(logits - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        l_new = lse * corr + p.sum(axis=-1)
         pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vc.dtype), vc,
                         preferred_element_type=jnp.float32)
         acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
@@ -142,9 +140,9 @@ def flash_attention(q, k, v, *, causal: bool, q_offset=0,
     m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, H, Sq), jnp.float32)
     a0 = jnp.zeros((B, Sq, H, D), jnp.float32)
-    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
-                                     (kb, vb))
-    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    (m, lse, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
+                                       (kb, vb))
+    out = acc / jnp.maximum(lse, 1e-30).transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)
 
 
@@ -216,7 +214,8 @@ def attention_apply(p, x, cfg, *, positions, rules=None, cdt=jnp.bfloat16,
             kc = rules.constrain(kc, "batch", "kv_heads", "cache_seq", None)
             vc = rules.constrain(vc, "batch", "kv_heads", "cache_seq", None)
         Sc = kc.shape[2]
-        qg = q.reshape(B, S, nkv, G, hd).transpose(0, 2, 3, 1, 4)  # B,nkv,G,S,D
+        # -> B,nkv,G,S,D
+        qg = q.reshape(B, S, nkv, G, hd).transpose(0, 2, 3, 1, 4)
         qg = qg.reshape(B, nkv, G * S, hd)
         logits = jnp.einsum("bhgk,bhsk->bhgs", qg, kc.astype(cdt),
                             preferred_element_type=jnp.float32)

@@ -58,7 +58,8 @@ def mamba_axes(cfg):
 
 
 def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
-    """Depthwise causal conv. x: (B, S, di); w: (k, di). state: (B, k-1, di)."""
+    """Depthwise causal conv. x: (B, S, di); w: (k, di).
+    state: (B, k-1, di)."""
     k = w.shape[0]
     if state is None:
         xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
@@ -131,7 +132,8 @@ def mamba_apply(p, x, cfg, *, rules=None, cdt=jnp.bfloat16,
     def rsh(t):
         return t.reshape(B, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
 
-    xch, dtch, Bch, Cch = rsh(xin.astype(jnp.float32)), rsh(dt), rsh(Bm), rsh(Cm)
+    xch, dtch, Bch, Cch = (rsh(xin.astype(jnp.float32)), rsh(dt),
+                           rsh(Bm), rsh(Cm))
 
     def chunk_step(s0, inp):
         xc_, dt_, B_, C_ = inp                       # (B, c, di|N)

@@ -14,12 +14,10 @@ dry-run). Layer stacks scan over stacked params (leading "stack" axis).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models import moe as M

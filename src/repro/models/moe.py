@@ -45,7 +45,8 @@ def moe_axes(cfg):
 
 def _capacity(chunk_tokens: int, cfg) -> int:
     m = cfg.moe
-    cap = int(np.ceil(chunk_tokens * m.top_k * m.capacity_factor / m.n_experts))
+    cap = int(np.ceil(
+        chunk_tokens * m.top_k * m.capacity_factor / m.n_experts))
     return max(cap, m.top_k)
 
 
@@ -76,12 +77,12 @@ def moe_apply(p, x, cfg, *, rules=None, cdt=jnp.bfloat16):
         slot = (pos * onehot).sum(-1)                                # B,c,K
         keep = slot < cap
         slot_oh = jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
-                                 dtype=jnp.float32)[..., :cap]       # B,c,K,cap
-        disp = jnp.einsum("bcke,bckp->bcep", onehot, slot_oh)        # B,c,E,cap
+                                 dtype=jnp.float32)[..., :cap]  # B,c,K,cap
+        disp = jnp.einsum("bcke,bckp->bcep", onehot, slot_oh)  # B,c,E,cap
         comb = jnp.einsum("bcke,bckp,bck->bcep", onehot, slot_oh,
                           topv.astype(jnp.float32))
         # dispatch tokens to expert slots
-        xin = jnp.einsum("bcep,bcd->ebpd", disp.astype(cdt), h)      # E,B,cap,D
+        xin = jnp.einsum("bcep,bcd->ebpd", disp.astype(cdt), h)  # E,B,cap,D
         if rules is not None:
             xin = rules.constrain(xin, "experts", "batch", None, None)
         gate = jax.nn.silu(jnp.einsum("ebpd,edf->ebpf", xin,

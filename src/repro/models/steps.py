@@ -6,7 +6,7 @@ model input (no allocation) — the dry-run lowers against these.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +83,8 @@ def make_loss_fn(cfg: ArchConfig, rules=None, remat=True):
 
 def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                     rules=None, remat=True, grad_transform=None):
-    """Returns train_step(params, opt_state, batch) -> (params', state', metrics).
+    """Returns train_step(params, opt_state, batch)
+    -> (params', state', metrics).
 
     grad_transform: optional fn(grads) -> grads (e.g. compression hook) applied
     before the optimizer.

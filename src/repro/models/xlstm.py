@@ -291,6 +291,7 @@ def count_params(cfg) -> int:
     n_pairs = max(cfg.n_layers // 2, 1)
     shapes = jax.eval_shape(lambda kk: {
         "m": mlstm_init(kk, cfg), "s": slstm_init(kk, cfg)}, k)
-    per_pair = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    per_pair = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(shapes))
     emb = cfg.vocab * cfg.d_model
     return n_pairs * per_pair + emb + cfg.d_model

@@ -11,7 +11,7 @@ transfers 1/4 of the bytes on the wire.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -51,7 +51,8 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
 class ShardingRules:
     """Resolves logical axis names to PartitionSpecs on a concrete mesh."""
 
-    def __init__(self, mesh: Mesh, overrides: Optional[Dict[str, AxisRule]] = None):
+    def __init__(self, mesh: Mesh,
+                 overrides: Optional[Dict[str, AxisRule]] = None):
         self.mesh = mesh
         self.rules = dict(DEFAULT_RULES)
         if overrides:
@@ -64,7 +65,8 @@ class ShardingRules:
                     self.rules[k] = tuple(v)
         self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
-    def _axes_for(self, logical: Optional[str], dim: int) -> Optional[Tuple[str, ...]]:
+    def _axes_for(self, logical: Optional[str],
+                  dim: int) -> Optional[Tuple[str, ...]]:
         if logical is None:
             return None
         axes = [a for a in self.rules.get(logical, ()) if a in self.axis_sizes]
@@ -112,7 +114,8 @@ class ShardingRules:
 
 
 def tree_shardings(rules: ShardingRules, tree_axes, tree_shapes):
-    """Map a pytree of logical-axis tuples + matching shapes to NamedShardings."""
+    """Map a pytree of logical-axis tuples + matching shapes to
+    NamedShardings."""
     return jax.tree.map(
         lambda axes, shape: rules.sharding(axes, shape),
         tree_axes, tree_shapes,

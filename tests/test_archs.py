@@ -116,7 +116,8 @@ def test_param_counts_match_init():
     for name in ["qwen3-0.6b", "qwen3-1.7b", "starcoder2-3b"]:
         cfg = get_arch(name)
         abs_p = STEPS.abstract_params(cfg)
-        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abs_p))
+        actual = sum(int(np.prod(x.shape))
+                     for x in jax.tree.leaves(abs_p))
         expected = cfg.param_count()
         assert abs(actual - expected) / expected < 0.02, \
             f"{name}: init {actual} vs analytic {expected}"

@@ -124,7 +124,7 @@ def test_training_reduces_loss(small_dataset):
     res = TR.train_model("conv1d", COSTMODEL_SMALL, tr,
                          "valu_utilization", steps=120, batch_size=64,
                          log_every=20)
-    losses = [l for _, l in res.history]
+    losses = [v for _, v in res.history]
     assert losses[-1] < losses[0]
 
 

@@ -1,7 +1,6 @@
 """Loop-aware HLO cost analyzer: validated against known-flops programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost as HC

@@ -69,7 +69,7 @@ def test_multihead_axes_match_params():
             params = init_fn(jax.random.PRNGKey(0), COSTMODEL_SMALL, **kw)
             axes = axes_fn(COSTMODEL_SMALL, heads=heads) if heads \
                 else axes_fn(COSTMODEL_SMALL)
-            shapes = jax.tree.map(lambda l: l.shape, params)
+            shapes = jax.tree.map(lambda x: x.shape, params)
             shardings = tree_shardings(rules, axes, shapes)
             assert jax.tree.structure(params) == \
                 jax.tree.structure(shardings)
@@ -107,7 +107,7 @@ def test_joint_training_comparable_to_single_head(small_dataset):
         assert mm["rmse_norm"] <= 2.0 * sm["rmse_norm"] + 0.25, \
             (target, mm["rmse_norm"], sm["rmse_norm"])
     # joint loss decreased over training
-    losses = [l for _, l in multi.history]
+    losses = [v for _, v in multi.history]
     assert losses[-1] < losses[0]
 
 
@@ -198,9 +198,11 @@ def test_bucketed_matches_unbucketed(unified_service, small_dataset):
         params = init_fn(jax.random.PRNGKey(2), COSTMODEL_SMALL, heads=HEADS)
         stats = {t: {"mu": 0.0, "sigma": 1.0} for t in HEADS}
         # max_seq = cfg.max_seq: the xformer's pos table bounds seq length
-        mk = lambda buckets: CostModelService(
-            kind, COSTMODEL_SMALL, params, small_dataset.vocab, stats,
-            mode="ops", max_seq=COSTMODEL_SMALL.max_seq, buckets=buckets)
+        def mk(buckets):
+            return CostModelService(
+                kind, COSTMODEL_SMALL, params, small_dataset.vocab, stats,
+                mode="ops", max_seq=COSTMODEL_SMALL.max_seq,
+                buckets=buckets)
         bucketed, unbucketed = mk(None), mk((COSTMODEL_SMALL.max_seq,))
         assert len(bucketed.buckets) > 1
         pb = bucketed.predict_all(gs)

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 from repro.core import augment as AUG
 from repro.core import tokenizer as TOK
 from repro.ir import analyzers, samplers
-from repro.ir.graph import Graph, Tensor
 from repro.launch import hlo_cost as HC
 
 SETTINGS = dict(max_examples=25, deadline=None,

@@ -1,0 +1,269 @@
+"""CostModelServer: coalescing, flush paths, backpressure, warm-up,
+metrics, and bit-parity with direct CostModelService calls."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.costmodel import CostModelConfig
+from repro.core import models as CM
+from repro.core import tokenizer as TOK
+from repro.core.server import CostModelServer, ServerOverloadedError
+from repro.core.service import CostModelService, UnrollAdvisor
+from repro.ir import samplers
+
+CFG = CostModelConfig(name="srv-test", vocab_size=512, max_seq=64,
+                      embed_dim=16, conv_channels=(16,) * 6,
+                      fc_dims=(32, 16))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    graphs = [samplers.sample_graph(rng) for _ in range(48)]
+    vocab = TOK.fit_vocab([TOK.graph_tokens(g, "ops") for g in graphs],
+                          max_size=512)
+    return graphs, vocab
+
+
+@pytest.fixture(scope="module")
+def make_service(corpus):
+    """Fresh, identically-weighted services (untrained params: parity
+    and scheduling do not depend on training)."""
+    _, vocab = corpus
+    params = CM.conv_init(jax.random.PRNGKey(0), CFG, heads=CM.DEFAULT_HEADS)
+    stats = {t: {"mu": 0.3, "sigma": 1.7} for t in CM.DEFAULT_HEADS}
+
+    def make(**kw):
+        kw.setdefault("max_batch", 8)
+        return CostModelService("conv1d", CFG, params, vocab, stats,
+                                mode="ops", max_seq=64, **kw)
+    return make
+
+
+def test_server_bit_identical_to_direct_service(corpus, make_service):
+    """Interleaved multi-client submission through the server returns
+    exactly the bytes direct predict_all returns — across coalesced
+    batches, both flush paths, and the LRU."""
+    graphs, _ = corpus
+    direct = make_service()
+    want = direct.predict_all(graphs)
+
+    served = make_service()
+    results = {}
+    res_lock = threading.Lock()
+    with CostModelServer(served, max_batch=8, flush_us=1000) as server:
+        def client(idxs):
+            for i in idxs:
+                out = server.predict_all([graphs[i]])
+                with res_lock:
+                    results[i] = out
+        threads = [threading.Thread(target=client,
+                                    args=(range(k, len(graphs), 6),))
+                   for k in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert set(results) == set(range(len(graphs)))
+    for i in range(len(graphs)):
+        for t in CM.DEFAULT_HEADS:
+            got, exp = results[i][t][0], want[t][i]
+            assert got == exp, (i, t, got, exp)   # bit-identical
+
+
+def test_deadline_flush_path(corpus, make_service):
+    """Fewer requests than max_batch resolve via the deadline/stall
+    path, never a full-batch flush, and still match direct results."""
+    graphs, _ = corpus
+    direct = make_service()
+    svc = make_service()
+    with CostModelServer(svc, max_batch=8, flush_us=500) as server:
+        out = server.predict_all(graphs[:3])
+        m = server.metrics.snapshot()
+    want = direct.predict_all(graphs[:3])
+    for t in CM.DEFAULT_HEADS:
+        np.testing.assert_array_equal(out[t], want[t])
+    assert m["full_flushes"] == 0
+    assert m["deadline_flushes"] + m["stagnant_flushes"] >= 1
+    assert m["requests"] == 3
+
+
+def test_full_batch_flush_path(corpus, make_service):
+    """A bucket reaching max_batch flushes immediately even though the
+    deadline is far away — and matches direct results bit-for-bit."""
+    graphs, _ = corpus
+    svc = make_service()
+    # same-bucket graphs so one queue can actually fill
+    by_bucket = {}
+    for g in graphs:
+        _, ids = svc.entry(g)
+        by_bucket.setdefault(len(ids), []).append(g)
+    bucket_graphs = max(by_bucket.values(), key=len)[:4]
+    assert len(bucket_graphs) == 4
+
+    direct = make_service()
+    want = direct.predict_all(bucket_graphs)
+    svc2 = make_service(max_batch=4)
+    with CostModelServer(svc2, max_batch=4, flush_us=10_000_000) as server:
+        futs = [server.submit(g) for g in bucket_graphs]
+        raw = np.stack([f.result(timeout=30) for f in futs])
+        m = server.metrics.snapshot()
+        out = svc2.denormalize_rows(raw)
+    for t in CM.DEFAULT_HEADS:
+        np.testing.assert_array_equal(out[t], want[t])
+    assert m["full_flushes"] >= 1
+
+
+def test_cache_hit_and_coalescing(corpus, make_service):
+    graphs, _ = corpus
+    svc = make_service()
+    with CostModelServer(svc, max_batch=8, flush_us=2000) as server:
+        g = graphs[0]
+        first = server.predict_all([g])
+        # identical re-query: resolved at submit time from the LRU
+        again = server.predict_all([g])
+        m = server.metrics.snapshot()
+        assert m["cache_hits"] >= 1
+        assert m["cache_hit_rate"] > 0
+        for t in CM.DEFAULT_HEADS:
+            np.testing.assert_array_equal(first[t], again[t])
+
+        # concurrent duplicates of a NEW graph coalesce onto one compute
+        g2 = graphs[1]
+        futs = [server.submit(g2) for _ in range(5)]
+        rows = [f.result(timeout=30) for f in futs]
+        m = server.metrics.snapshot()
+        assert m["coalesced"] >= 1
+        for r in rows[1:]:
+            np.testing.assert_array_equal(r, rows[0])
+
+
+def test_backpressure_load_shed(corpus, make_service):
+    """A full bounded queue sheds load with ServerOverloadedError."""
+    graphs, _ = corpus
+
+    def slow_dispatch_factory(service):
+        orig = service.forward_entries_dispatch
+
+        def slow_dispatch(entries):
+            time.sleep(0.25)           # hold the worker so the queue fills
+            return orig(entries)
+        return slow_dispatch
+
+    svc = make_service()
+    svc.forward_entries_dispatch = slow_dispatch_factory(svc)
+    with CostModelServer(svc, max_batch=2, flush_us=100,
+                         max_queue=2) as server:
+        futs = []
+        with pytest.raises(ServerOverloadedError):
+            for g in graphs[:12]:      # distinct graphs; queue bound is 2
+                futs.append(server.submit(g))
+        m = server.metrics.snapshot()
+        assert m["shed"] >= 1
+        for f in futs:                 # accepted requests still complete
+            assert f.result(timeout=30) is not None
+
+    # a storm on ONE hot in-flight key is bounded too: coalesced
+    # waiters count against max_queue
+    svc2 = make_service()
+    svc2.forward_entries_dispatch = slow_dispatch_factory(svc2)
+    with CostModelServer(svc2, max_batch=2, flush_us=100,
+                         max_queue=2) as server:
+        futs = []
+        with pytest.raises(ServerOverloadedError):
+            for _ in range(12):
+                futs.append(server.submit(graphs[0]))
+        for f in futs:
+            assert f.result(timeout=30) is not None
+
+
+def test_warmup_precompiles_every_program(make_service):
+    """start(warmup=True) AOT-compiles every (bucket x ladder-batch)
+    program: serving traffic afterwards never triggers a new compile."""
+    svc = make_service(max_batch=4, batch_ladder=(1, 2, 4))
+    n = svc.warmup()
+    assert n == len(svc.buckets) * len(svc.batch_ladder)
+    if not hasattr(svc._apply, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    compiled = svc._apply._cache_size()
+    assert compiled == n
+    rng = np.random.default_rng(3)
+    svc.predict_all([samplers.sample_graph(rng) for _ in range(9)])
+    assert svc._apply._cache_size() == compiled   # no first-call compile
+
+
+def test_server_drives_advisors(corpus, make_service):
+    """The gateway duck-types the service API: advisors work unchanged
+    and agree with the same advisor over the direct service."""
+    graphs, _ = corpus
+    direct = make_service()
+    svc = make_service()
+    with CostModelServer(svc, max_batch=8, flush_us=500) as server:
+        a_direct = UnrollAdvisor(direct, register_budget=1e9)
+        a_served = UnrollAdvisor(server, register_budget=1e9)
+        g = graphs[2]
+        want = a_direct.advise(g, factors=(1, 2))
+        got = a_served.advise(g, factors=(1, 2))
+    assert got == want
+
+
+def test_metrics_latency_percentiles(corpus, make_service):
+    graphs, _ = corpus
+    svc = make_service()
+    with CostModelServer(svc, max_batch=8, flush_us=500) as server:
+        server.predict_all(graphs[:10])
+        m = server.metrics.snapshot(server.queue_depth())
+    assert m["requests"] == 10
+    assert m["batches"] >= 1
+    assert m["batch_occupancy"] > 0
+    assert 0 < m["latency_p50_us"] <= m["latency_p95_us"] \
+        <= m["latency_p99_us"]
+    assert m["queue_depth"] == 0
+
+
+def test_submit_requires_started_server(corpus, make_service):
+    graphs, _ = corpus
+    server = CostModelServer(make_service())
+    with pytest.raises(RuntimeError):
+        server.submit(graphs[0])
+    server.start(warmup=False)
+    assert np.isfinite(server.predict(graphs[0], "latency_us"))
+    server.stop()
+    with pytest.raises(RuntimeError):
+        server.submit(graphs[0])
+
+
+def test_service_lru_thread_safety_hammer(corpus, make_service):
+    """Concurrent direct predict_all callers on one service with a tiny
+    LRU (constant eviction) neither crash nor corrupt results."""
+    graphs, _ = corpus
+    svc = make_service(cache_size=8)
+    want = {t: v.copy()
+            for t, v in make_service().predict_all(graphs).items()}
+    errs = []
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(6):
+                idx = rng.integers(0, len(graphs), 12)
+                out = svc.predict_all([graphs[i] for i in idx])
+                for t in CM.DEFAULT_HEADS:
+                    np.testing.assert_array_equal(out[t], want[t][idx])
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    stats = svc.cache_stats()
+    assert stats["size"] <= 8
+    # duplicate graphs inside one call dedup before the probe, so the
+    # exact count varies — but both counters must have moved
+    assert stats["misses"] > 0 and stats["hits"] > 0

@@ -7,7 +7,6 @@ logic (divisibility, axis reuse) is identical.
 """
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.runtime.sharding import ShardingRules

@@ -8,7 +8,6 @@ kill-and-resume mid-run reproduces the uninterrupted run's final params
 train_model compatibility wrapper still drives the engine.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
