@@ -1,13 +1,18 @@
-"""Soft perf gate over BENCH_serve_concurrent.json.
+"""Soft perf gates over BENCH_*.json records (dispatched on bench name).
 
-Fails (exit 1) if the async CostModelServer's req/s at concurrency 64
-fell below the serialized per-request baseline — i.e. if micro-batching
-stopped paying for itself. The paper-level target is >=3x; CI machines
-are noisy shared runners, so the gate only enforces >= the baseline
-(ratio 1.0 by default) and prints the measured ratio for the artifact
-trail.
+* ``serve_concurrent`` — fails (exit 1) if the async CostModelServer's
+  req/s at concurrency 64 fell below the serialized per-request baseline
+  — i.e. if micro-batching stopped paying for itself. The paper-level
+  target is >=3x; CI machines are noisy shared runners, so the gate only
+  enforces >= the baseline (ratio 1.0 by default) and prints the
+  measured ratio for the artifact trail.
+* ``opt_search`` — fails if beam search's mean *oracle* latency
+  improvement fell below the greedy one-shot fusion baseline's (within
+  ``--opt-tolerance``) — i.e. if the model-guided search stopped beating
+  the single-rule advisor it replaced.
 
     python benchmarks/gate.py bench-artifacts/BENCH_serve_concurrent.json
+    python benchmarks/gate.py bench-artifacts/BENCH_opt_search.json
 """
 from __future__ import annotations
 
@@ -16,17 +21,7 @@ import json
 import sys
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("record", help="path to BENCH_serve_concurrent.json")
-    ap.add_argument("--concurrency", default="64",
-                    help="which client-count level to gate on")
-    ap.add_argument("--min-ratio", type=float, default=1.0,
-                    help="minimum req/s ratio over the serialized "
-                         "baseline (soft gate; local target is 3.0)")
-    args = ap.parse_args()
-    with open(args.record) as f:
-        rec = json.load(f)
+def gate_serve_concurrent(rec, args) -> int:
     result = rec["result"]
     lvl = result["levels"][args.concurrency]
     # matched-load serialized baseline (same client count); fall back to
@@ -43,6 +38,51 @@ def main() -> int:
         return 1
     print("perf gate passed")
     return 0
+
+
+def gate_opt_search(rec, args) -> int:
+    s = rec["result"]["summary"]
+    beam = s["oracle_improvement_mean"]
+    base = s["baseline_oracle_improvement_mean"]
+    print(f"opt_search: beam oracle improvement {beam:.1%} vs one-shot "
+          f"fusion baseline {base:.1%} "
+          f"(gate: beam >= baseline - {args.opt_tolerance:.1%}; "
+          f"strictly better on "
+          f"{s['frac_strictly_better_than_baseline']:.0%} of graphs)")
+    if beam < base - args.opt_tolerance:
+        print("PERF GATE FAILED: beam search is not matching the greedy "
+              "single-rule fusion baseline on the oracle", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+GATES = {
+    "serve_concurrent": gate_serve_concurrent,
+    "opt_search": gate_opt_search,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("record", help="path to a BENCH_<name>.json record")
+    ap.add_argument("--concurrency", default="64",
+                    help="serve_concurrent: client-count level to gate on")
+    ap.add_argument("--min-ratio", type=float, default=1.0,
+                    help="serve_concurrent: minimum req/s ratio over the "
+                         "serialized baseline (soft gate; local target "
+                         "is 3.0)")
+    ap.add_argument("--opt-tolerance", type=float, default=0.01,
+                    help="opt_search: slack on beam-vs-baseline oracle "
+                         "improvement (absolute)")
+    args = ap.parse_args()
+    with open(args.record) as f:
+        rec = json.load(f)
+    gate = GATES.get(rec.get("bench"))
+    if gate is None:
+        print(f"no gate defined for bench {rec.get('bench')!r}; skipping")
+        return 0
+    return gate(rec, args)
 
 
 if __name__ == "__main__":

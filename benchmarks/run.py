@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
   serve_concurrent  — async micro-batching CostModelServer under 1/8/64
                       closed-loop clients vs serialized per-request
                       predict_all (req/s + latency percentiles).
+  opt_search        — repro.opt beam search over rewrite sequences
+                      through the server vs the one-shot FusionAdvisor
+                      baseline (graphs/s + oracle latency improvement).
   roofline_table    — reads experiments/dryrun/*.json into the §Roofline
                       table (derived = roofline fraction).
 
@@ -407,6 +410,73 @@ def serve_concurrent(full: bool = False, seed: int = 0):
     return out
 
 
+# ---------------------------------------------------------------- opt_search
+def opt_search(full: bool = False, seed: int = 0):
+    """Cost-model-guided beam search (repro.opt) vs the one-shot
+    FusionAdvisor baseline, judged by the ir/analyzers oracle.
+
+    Trains a joint multi-target conv1d model on a rewrite-augmented
+    corpus (so fused / bf16 IR text is in-vocabulary), serves it behind
+    the async micro-batching CostModelServer, then beam-searches rewrite
+    sequences over graphs sampled from all five families. Reports search
+    throughput (graphs/s — every frontier expansion is ONE batched
+    predict_all through the server) and oracle latency improvement;
+    ``gate.py`` soft-gates beam improvement >= the baseline's."""
+    from repro.core.server import CostModelServer
+    from repro.core.service import CostModelService
+    from repro.ir import samplers
+    from repro.opt import evaluate as OE
+    from repro.opt import search as OS
+
+    n_train = 3000 if full else 700
+    steps = 700 if full else 250
+    n_eval = 50 if full else 20
+    cfg = CostModelConfig(name="opt-bench", vocab_size=4096, max_seq=160,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    ds = DS.build_dataset(n_train, mode="ops", max_seq=160,
+                          vocab_size=4096, augment_factor=1,
+                          rewrite_factor=1, seed=seed)
+    tr, _ = ds.split(0.1)
+    t0 = time.time()
+    res = TR.TrainEngine("conv1d", cfg, CM.DEFAULT_HEADS, steps=steps,
+                         batch_size=128, lr=2e-3, seed=seed).fit(tr)
+    _row("opt_search/train", (time.time() - t0) * 1e6,
+         f"steps={steps};rows={len(tr)}")
+    svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
+                           res.norm_stats, mode="ops", max_seq=160)
+    rng = np.random.default_rng(seed + 1)
+    fams = sorted(samplers.SAMPLERS)
+    graphs = [samplers.sample_graph(rng, fams[i % len(fams)])
+              for i in range(n_eval)]
+    with CostModelServer(svc, max_batch=64, flush_us=1000) as server:
+        t0 = time.perf_counter()
+        report = OE.evaluate_search(
+            server, graphs, objective=OS.Objective(),
+            beam_width=4 if full else 3, max_steps=6 if full else 4,
+            eval_budget=256 if full else 128)
+        dt = time.perf_counter() - t0
+        metrics = server.metrics.snapshot()
+    s = report["summary"]
+    throughput = n_eval / dt
+    _row("opt_search/beam", dt / n_eval * 1e6,
+         f"graphs_s={throughput:.2f}"
+         f";oracle_impr={s['oracle_improvement_mean']:.1%}"
+         f";fuse_baseline={s['baseline_oracle_improvement_mean']:.1%}"
+         f";beat_baseline={s['frac_strictly_better_than_baseline']:.0%}")
+    _row("opt_search/model_fidelity", 0.0,
+         f"pred_impr={s['pred_improvement_mean']:.1%}"
+         f";spearman_within={s['spearman_pred_oracle']:.3f}"
+         f";spearman_pooled={s['spearman_pred_oracle_pooled']:.3f}"
+         f";candidates={s['candidates_costed']}"
+         f";predict_calls={s['predict_calls']}")
+    return {"n_eval": n_eval, "throughput_graphs_s": throughput,
+            "summary": s, "per_graph": report["per_graph"],
+            "server": {k: metrics[k] for k in
+                       ("requests", "batches", "batch_occupancy",
+                        "cache_hit_rate")}}
+
+
 # --------------------------------------------------------------- train_bench
 def train_bench(full: bool = False, seed: int = 0):
     """TrainEngine bucketed batching vs max_seq padding on a mixed-length
@@ -487,6 +557,7 @@ BENCHES = {
     "kernel_bench": kernel_bench,
     "serve_bench": serve_bench,
     "serve_concurrent": serve_concurrent,
+    "opt_search": opt_search,
     "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,

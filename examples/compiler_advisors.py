@@ -10,6 +10,11 @@ batched forward passes; and the LRU cache behind the server is shared
 across advisors — a graph costed during fusion search is free during
 unroll search.
 
+The finale is the full ``repro.opt`` engine the advisors are thin
+wrappers over: beam search across the whole rewrite registry (fusion,
+CSE, DCE, recompute, bf16 narrowing, unroll), one batched predict_all
+per frontier expansion, judged against the analyzer oracle.
+
     PYTHONPATH=src python examples/compiler_advisors.py
 """
 import numpy as np
@@ -21,16 +26,21 @@ from repro.core import trainer as TR
 from repro.core.server import CostModelServer
 from repro.core.service import (CostModelService, FusionAdvisor,
                                 RecompileAdvisor, UnrollAdvisor)
-from repro.ir import dataset as DS
+from repro.ir import analyzers, dataset as DS
 from repro.ir import samplers
+from repro.opt import evaluate as OE
+from repro.opt import search as OPT
 
 
 def main(n_graphs=900, train_steps=300, seed=0):
     cfg = CostModelConfig(name="advisors", vocab_size=4096, max_seq=160,
                           embed_dim=64, conv_channels=(64,) * 6,
                           fc_dims=(256, 64))
+    # rewrite_factor puts fused/bf16 IR text in the corpus (and vocab),
+    # so the model can rank the optimizer's candidates
     ds = DS.build_dataset(n_graphs, mode="ops", max_seq=160,
-                          vocab_size=4096, augment_factor=2, seed=seed)
+                          vocab_size=4096, augment_factor=1,
+                          rewrite_factor=1, seed=seed)
     tr, te = ds.split(0.1)
     print(f"training one model for all targets: {list(CM.DEFAULT_HEADS)}")
     res = TR.TrainEngine("conv1d", cfg, CM.DEFAULT_HEADS,
@@ -65,6 +75,19 @@ def main(n_graphs=900, train_steps=300, seed=0):
         dec = recompile.advise(g, g2)
         print(f"recompile advisor: recompile={dec['recompile']} "
               f"shift={dec['shift']:.1%}")
+
+        # the full engine: beam search over the whole rewrite registry
+        gb = samplers.sample_graph(rng, "bert")
+        res = OPT.beam_search(server, gb, beam_width=3, max_steps=4)
+        final = OE.replay(res)
+        print(f"beam search [{gb.name}]: {res.describe()}")
+        print(f"  predicted latency {res.root_preds['latency_us']:.1f}us "
+              f"-> {res.best_preds['latency_us']:.1f}us in "
+              f"{res.expansions} expansions "
+              f"({res.evaluated} candidates, "
+              f"{res.predict_calls} batched predict_all calls)")
+        print(f"  oracle latency    {analyzers.latency_us(gb):.1f}us "
+              f"-> {analyzers.latency_us(final):.1f}us")
         m = server.metrics.snapshot()
         print(f"server session: {m['requests']} requests, "
               f"{m['batches']} batched forward passes "

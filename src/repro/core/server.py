@@ -16,9 +16,12 @@ turns that into a coalescing pipeline:
   service pads batches up to a fixed power-of-two ladder, so results are
   bit-identical to direct per-request ``predict_all`` calls no matter
   how requests were packed.
-* **in-flight dedup** — concurrent requests for the same content hash
-  coalesce onto one compute; the LRU answers repeats for free and
-  cache hits resolve at submit time without touching a queue.
+* **in-flight dedup** — concurrent requests for the same canonical
+  ``Graph.struct_key()`` (so also SSA-renumbered / re-scheduled
+  spellings of one program, e.g. the same candidate derived through two
+  rewrite orders by concurrent ``repro.opt`` searches) coalesce onto one
+  compute; the LRU answers repeats for free and cache hits resolve at
+  submit time without touching a queue.
 * **backpressure** — the total number of outstanding requests (queued
   entries plus waiters coalesced onto in-flight keys) is bounded by
   ``max_queue``; beyond it ``submit`` sheds load by raising

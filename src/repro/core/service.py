@@ -14,18 +14,25 @@ while compiling in order to make the best decisions." This module provides:
 * a bounded LRU prediction cache (per-target vectors keyed by content
   hash) so a long-running compiler session can't grow memory without
   limit.
-* three compiler advisors built on top of it:
-  - FusionAdvisor:    fuse A->B if predicted cost(fused) < cost(A)+cost(B)
-  - UnrollAdvisor:    pick unroll factor in {1,2,4,8} minimizing predicted
-                      latency while register pressure stays under budget
-                      (both targets from ONE service, one forward pass)
+* three compiler advisors built on top of it — since PR 4 each is a thin
+  wrapper over a single-rule ``repro.opt`` search (the full multi-rule
+  beam search lives in :mod:`repro.opt.search`):
+  - FusionAdvisor:    greedy search over the elementwise-fusion rule
+  - UnrollAdvisor:    one Unroll-rule expansion; pick the factor with the
+                      best per-iteration predicted latency while register
+                      pressure stays under budget (both targets from ONE
+                      batched forward pass)
   - RecompileAdvisor: given new tensor shapes, reuse compiled code if the
                       predicted characteristic shift is below a threshold
                       (the paper's dynamic-runtime recompile decision).
+
+The LRU is keyed by ``Graph.struct_key()`` — the same canonical
+structural hash the opt search dedups its frontier with — so two
+SSA-renumbered or re-scheduled spellings of one program share a cache
+entry (and coalesce in flight at the server).
 """
 from __future__ import annotations
 
-import hashlib
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -159,13 +166,22 @@ class CostModelService:
         return self.vocab.encode(toks, self._bucket_len(len(toks)))
 
     def entry(self, g: Graph) -> Tuple[str, np.ndarray]:
-        """Batch entry for one graph: (content hash, bucket-padded ids).
+        """Batch entry for one graph: (struct key, bucket-padded ids).
 
-        The hash keys the LRU cache; ``len(ids)`` is the bucket, which a
-        coalescing server uses to route the entry onto a queue of
-        same-shape requests."""
-        ids = self._encode(g)
-        return hashlib.sha1(ids.tobytes()).hexdigest(), ids
+        The canonical structural hash keys the LRU cache (invariant
+        under SSA renumbering and re-scheduling, so a compiler re-query
+        of a re-spelled program is a hit); ``len(ids)`` is the bucket,
+        which a coalescing server uses to route the entry onto a queue
+        of same-shape requests.
+
+        Deliberate canonicalization trade: schedule-dependent targets
+        (register pressure legitimately varies across topological
+        re-schedules — see core/augment.py) are served at whichever
+        spelling was costed first; the cache answers per dataflow
+        graph, not per schedule. Callers that must distinguish
+        schedules should query an empty-cache service or embed the
+        schedule in the graph structure."""
+        return g.struct_key(), self._encode(g)
 
     def _stats_for(self, t: str) -> Dict[str, float]:
         return self.norm_stats[t] if self._multi else self.norm_stats
@@ -356,77 +372,35 @@ class CostModelService:
 
 
 # --------------------------------------------------------------- advisors
-def fuse_elementwise(g: Graph) -> Graph:
-    """Fuse producer->consumer elementwise chains into single 'xpu.fused'
-    ops (a graph-level operator-fusion transform)."""
-    from repro.ir.graph import ELEMENTWISE
-    new = Graph(name=g.name + "_fused")
-    new.values = list(g.values[:g.n_args])
-    new.n_args = g.n_args
-    id_map = {i: i for i in range(g.n_args)}
-    uses: Dict[int, int] = {}
-    for op in g.ops:
-        for o in op.operands:
-            uses[o] = uses.get(o, 0) + 1
-    producer = {op.result: op for op in g.ops}
-    fused_into: Dict[int, int] = {}
-    for op in g.ops:
-        if (op.opcode in ELEMENTWISE and len(op.operands) == 1
-                and op.operands[0] in producer
-                and producer[op.operands[0]].opcode in ELEMENTWISE
-                and uses.get(op.operands[0], 0) == 1
-                and op.operands[0] in fused_into):
-            # extend the producer's fusion group
-            fused_into[op.result] = fused_into[op.operands[0]]
-            id_map[op.result] = id_map[op.operands[0]]
-            new.values[id_map[op.result]] = g.values[op.result]
-            continue
-        nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
-                         g.values[op.result], **op.attrs)
-        id_map[op.result] = nid
-        if op.opcode in ELEMENTWISE:
-            fused_into[op.result] = nid
-    new.outputs = [id_map[o] for o in g.outputs]
-    new.validate()
-    return new
+# The transforms themselves live in the repro.opt rewrite registry now;
+# re-exported here for existing callers.
+from repro.opt.rewrites import (  # noqa: E402  (re-export)
+    FuseElementwise, Unroll, fuse_elementwise, unroll_graph)
+from repro.opt import search as OPT  # noqa: E402
 
 
 @dataclass
 class FusionAdvisor:
+    """One-rule wrapper over the opt search: greedily fuse elementwise
+    chains while the model predicts an improvement."""
     service: CostModelService
     target: str = "latency_us"
 
     def advise(self, g: Graph) -> Tuple[bool, float, float]:
-        fused = fuse_elementwise(g)
-        t = self.service.resolve_target(self.target)
-        c0, c1 = self.service.predict_graphs([g, fused], t)
-        return bool(c1 < c0), float(c0), float(c1)
-
-
-def unroll_graph(g: Graph, factor: int) -> Graph:
-    """Model loop unrolling of the graph body: replicate ops with renamed
-    SSA ids (shared args), as an unrolled inner loop would look to the
-    cost model."""
-    new = Graph(name=f"{g.name}_u{factor}")
-    new.values = list(g.values[:g.n_args])
-    new.n_args = g.n_args
-    outs = []
-    for rep in range(factor):
-        id_map = {i: i for i in range(g.n_args)}
-        for op in g.ops:
-            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
-                             g.values[op.result], **op.attrs)
-            id_map[op.result] = nid
-        outs.extend(id_map[o] for o in g.outputs)
-    new.outputs = outs
-    new.validate()
-    return new
+        obj = OPT.Objective(latency_target=self.target,
+                            pressure_target=None)
+        res = OPT.greedy_search(self.service, g,
+                                rules=[FuseElementwise()], objective=obj)
+        lat_t = self.service.resolve_target(self.target)
+        return (res.improved, float(res.root_preds[lat_t]),
+                float(res.best_preds[lat_t]))
 
 
 @dataclass
 class UnrollAdvisor:
-    """Unroll-factor search over ONE multi-target service: latency and
-    register pressure come out of the same forward pass per candidate."""
+    """Single-rule (Unroll) one-expansion search over ONE multi-target
+    service: latency and register pressure for every factor come out of
+    the same batched forward pass."""
     service: CostModelService
     register_budget: float = 64.0
     latency_target: str = "latency_us"
@@ -442,33 +416,43 @@ class UnrollAdvisor:
                 f"UnrollAdvisor needs a service with distinct "
                 f"{self.latency_target!r} and {self.pressure_target!r} "
                 f"heads; got heads={list(self.service.heads)}")
-        cands = {f: unroll_graph(g, f) for f in factors}
-        preds = self.service.predict_all(list(cands.values()))
-        lat = preds[lat_t]
-        reg = preds[reg_t]
-        per_iter = {f: lat[i] / f for i, f in enumerate(cands)}
-        feasible = [f for i, f in enumerate(cands)
-                    if reg[i] <= self.register_budget]
-        best = min(feasible or [1], key=lambda f: per_iter[f])
+        rule = Unroll(factors=tuple(factors), max_ops=None)
+        obj = OPT.Objective(
+            latency_target=self.latency_target,
+            pressure_target=self.pressure_target,
+            register_budget=self.register_budget).bind(self.service)
+        sites = rule.applicable(g)
+        cands = [rule.apply(g, s) for s in sites]
+        # ONE batched predict_all for the whole factor sweep; scores are
+        # per-iteration latency with the budget as a hard constraint
+        scores, preds = OPT.cost_graphs(
+            self.service, cands, obj, weights=[s.weight for s in sites])
+        lat, reg = preds[lat_t], preds[reg_t]
+        fs = [int(s.weight) for s in sites]
+        best = fs[int(np.argmin(scores))] if np.isfinite(scores).any() \
+            else 1
         return {"best_factor": int(best),
-                "per_iter_latency": {f: float(v) for f, v in per_iter.items()},
+                "per_iter_latency": {f: float(lat[i] / f)
+                                     for i, f in enumerate(fs)},
                 "register_pressure": {f: float(reg[i])
-                                      for i, f in enumerate(cands)}}
+                                      for i, f in enumerate(fs)}}
 
 
 @dataclass
 class RecompileAdvisor:
     """Dynamic-runtime decision: with operator shapes changed at runtime,
     is the already-compiled code still good enough, or is recompilation
-    (expensive) worth it?"""
+    (expensive) worth it? Costing rides the search's batched path."""
     service: CostModelService
     threshold: float = 0.15   # recompile if predicted cost shifts > 15%
     target: str = "latency_us"
 
     def advise(self, compiled_graph: Graph, new_graph: Graph) -> Dict:
-        t = self.service.resolve_target(self.target)
-        c_old, c_new = self.service.predict_graphs(
-            [compiled_graph, new_graph], t)
+        obj = OPT.Objective(latency_target=self.target,
+                            pressure_target=None).bind(self.service)
+        _, preds = OPT.cost_graphs(
+            self.service, [compiled_graph, new_graph], obj)
+        c_old, c_new = preds[obj.lat_t]
         shift = abs(c_new - c_old) / max(abs(c_old), 1e-9)
         return {"recompile": bool(shift > self.threshold),
                 "predicted_old": float(c_old),

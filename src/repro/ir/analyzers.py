@@ -21,8 +21,8 @@ from __future__ import annotations
 import math
 from typing import Dict
 
-from repro.ir.graph import (Graph, Op, Tensor, ELEMENTWISE, REDUCTION,
-                            CONTRACTION, DATA_MOVEMENT)
+from repro.ir.graph import (Graph, Op, Tensor, ELEMENTWISE, FUSED_OP,
+                            REDUCTION, CONTRACTION, DATA_MOVEMENT)
 
 VLEN = 8 * 128            # one VREG: 8 sublanes x 128 lanes of f32
 TILE_VREGS = 16           # a live value holds a streaming tile window of at
@@ -37,6 +37,11 @@ def _vreg_units(t: Tensor) -> int:
 
 def op_flops(g: Graph, op: Op) -> float:
     out = g.values[op.result]
+    if op.opcode == FUSED_OP:
+        # a fused elementwise chain does every constituent's arithmetic
+        # but only one HBM round trip (op_bytes sees just its operands
+        # and result — the intermediates never materialize)
+        return float(out.numel) * int(op.attrs.get("n_fused", 1))
     if op.opcode == "matmul":
         a = g.values[op.operands[0]]
         k = a.shape[-1]
@@ -63,6 +68,9 @@ def op_bytes(g: Graph, op: Op) -> float:
 
 def _valu_issues(g: Graph, op: Op) -> int:
     out = g.values[op.result]
+    if op.opcode == FUSED_OP:
+        return int(op.attrs.get("n_fused", 1)) * \
+            math.ceil(out.numel / VLEN)
     if op.opcode in ELEMENTWISE:
         return math.ceil(out.numel / VLEN)
     if op.opcode in REDUCTION:

@@ -193,19 +193,33 @@ class CostDataset:
 
 def sample_graph_stream(n_graphs: int, *, augment_factor: int = 1,
                         seed: int = 0,
-                        families: Optional[List[str]] = None
+                        families: Optional[List[str]] = None,
+                        rewrite_factor: int = 0
                         ) -> Iterator[Graph]:
     """Deterministic generator over sampled (+augmented) graphs.
 
     Two walks with the same arguments yield identical graphs — the
-    count-then-encode build's contract."""
+    count-then-encode build's contract.
+
+    ``rewrite_factor`` additionally yields, per base graph, that many
+    variants produced by short random ``repro.opt`` rewrite sequences
+    (fusion, CSE, DCE, recompute, bf16 narrowing, unrolling) with
+    targets recomputed by the analyzers. This is how ``xpu.fused`` ops
+    and ``...xbf16`` shape tokens get into training corpora — and hence
+    the vocab — so a deployed model can rank the optimizer's candidate
+    rewrites instead of seeing them as OOV text."""
     rng = np.random.default_rng(seed)
     fams = families or sorted(samplers.SAMPLERS)
+    if rewrite_factor:
+        from repro.opt import rewrites as RW   # opt sits above ir
+        rules = RW.default_rules()
     for i in range(n_graphs):
         g = samplers.sample_graph(rng, fams[i % len(fams)])
         yield g
         for _ in range(augment_factor - 1):
             yield AUG.augment(g, rng)
+        for _ in range(rewrite_factor):
+            yield RW.random_rewrite(g, rng, rules)
 
 
 def build_dataset(n_graphs: int = 2000, *, mode: str = "ops",
@@ -213,7 +227,8 @@ def build_dataset(n_graphs: int = 2000, *, mode: str = "ops",
                   augment_factor: int = 1, seed: int = 0,
                   keep_texts: bool = False,
                   families: Optional[List[str]] = None,
-                  layout: str = "dense") -> CostDataset:
+                  layout: str = "dense",
+                  rewrite_factor: int = 0) -> CostDataset:
     """Stream graphs, fit vocab from counts, encode, analyze.
 
     Pass 1 accumulates token counts, targets, lengths (and texts);
@@ -223,7 +238,7 @@ def build_dataset(n_graphs: int = 2000, *, mode: str = "ops",
     if layout not in ("dense", "bucketed"):
         raise ValueError(f"unknown layout {layout!r}")
     stream = dict(augment_factor=augment_factor, seed=seed,
-                  families=families)
+                  families=families, rewrite_factor=rewrite_factor)
     counts: Counter = Counter()
     targets: Dict[str, List[float]] = {k: [] for k in analyzers.TARGETS}
     seq_lens: List[int] = []

@@ -6,6 +6,7 @@ tensors with shape + element dtype.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
@@ -92,8 +93,42 @@ class Graph:
         except AssertionError:
             return False
 
+    def struct_key(self) -> str:
+        """Canonical structural hash of the dataflow graph.
+
+        Merkle-hashes every value through the use-def chains (args by
+        position, op results by opcode + operand hashes + attrs + result
+        type) and combines the op-hash *multiset* with the output tuple.
+        The key is therefore invariant under SSA id renumbering and under
+        reordering of independent ops (any topological re-schedule), but
+        distinguishes any change to an opcode, operand wiring, attribute,
+        or tensor type. It is the canonical identity used by both the
+        CostModelService LRU and the opt.search frontier dedup."""
+        memo: Dict[int, str] = {}
+        for i in range(self.n_args):
+            t = self.values[i]
+            memo[i] = hashlib.sha1(
+                f"arg{i}:{t.shape}:{t.dtype}".encode()).hexdigest()
+        for op in self.ops:
+            t = self.values[op.result]
+            attrs = ",".join(f"{k}={op.attrs[k]!r}"
+                             for k in sorted(op.attrs))
+            payload = (f"{op.opcode}"
+                       f"({','.join(memo[o] for o in op.operands)})"
+                       f"[{attrs}]->{t.shape}:{t.dtype}")
+            memo[op.result] = hashlib.sha1(payload.encode()).hexdigest()
+        body = ",".join(sorted(memo[op.result] for op in self.ops))
+        outs = ",".join(memo[o] for o in self.outputs)
+        return hashlib.sha1(
+            f"{self.n_args}|{body}|{outs}".encode()).hexdigest()
+
 
 # Op categories used by the analyzers (vector-ALU vs MXU vs memory ops).
+# The opt rewrites additionally emit the synthetic FUSED_OP ("fused", with
+# an n_fused attr counting its constituent elementwise ops); it is kept out
+# of these sets so category membership stays paper-faithful — the analyzers
+# model it explicitly.
+FUSED_OP = "fused"
 ELEMENTWISE = {"add", "sub", "mult", "div", "relu", "gelu", "silu", "tanh",
                "sigmoid", "exp", "neg", "abs", "maximum", "minimum", "rsqrt"}
 REDUCTION = {"softmax", "layernorm", "batchnorm", "reduce_sum", "reduce_max",

@@ -1,0 +1,423 @@
+"""Rewrite-rule registry over the ``xpu`` dataflow IR.
+
+Each rule implements the uniform :class:`Rewrite` interface —
+``applicable(g) -> [Site]`` enumerates every location the rule can fire,
+``apply(g, site) -> Graph`` fires it at one location — and every ``apply``
+passes through :func:`check_legal`: the result must be ``validate()``-clean
+with output shapes (and, unless the rule is an explicit precision
+tradeoff, dtypes) preserved, plus an optional oracle-equivalence hook for
+stronger semantic checks.
+
+Shipped rules (the paper's §1 graph-level optimizations):
+
+* ``fuse_elementwise`` — producer→consumer elementwise chains collapse
+  into ONE ``xpu.fused`` op carrying ``n_fused``/``chain`` attrs, so the
+  tokenizer emits visibly different IR for fused programs and the
+  analyzers charge one HBM round trip instead of one per constituent.
+* ``cse``       — dedup structurally-identical ops (same opcode, operands,
+  attrs, result type), rewiring uses onto the first occurrence.
+* ``dce``       — drop ops whose result is never used (and not an output).
+* ``recompute`` — duplicate a cheap (elementwise) multi-consumer producer
+  per consumer: recompute-vs-materialize, the enabling move for fusion
+  across what used to be a fan-out point.
+* ``dtype_narrow`` — narrow f32 *intermediates* to bf16 (graph outputs
+  keep their dtype): halves the HBM traffic the roofline oracle charges.
+* ``unroll``    — replicate the body (shared args) as an unrolled inner
+  loop would look to the cost model; output count scales by the factor,
+  so this rule alone opts out of exact output preservation.
+
+Sites discovered on a graph are only valid on that exact graph — a
+search applies one site, then re-enumerates on the rewritten result.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.ir.graph import ELEMENTWISE, FUSED_OP, Graph, Tensor
+
+
+class Site:
+    """One applicable rewrite location.
+
+    ``detail`` is rule-specific (op indices, factors); ``weight`` is the
+    objective's latency divisor (an unroll by f does f iterations' work,
+    so its per-iteration latency is latency/f)."""
+
+    __slots__ = ("rule", "detail", "weight")
+
+    def __init__(self, rule: str, detail: Tuple = (), weight: float = 1.0):
+        self.rule = rule
+        self.detail = tuple(detail)
+        self.weight = float(weight)
+
+    def __repr__(self) -> str:
+        return f"{self.rule}{self.detail}"
+
+
+def use_counts(g: Graph) -> Dict[int, int]:
+    """SSA id -> number of uses (operand slots + graph outputs)."""
+    uses: Dict[int, int] = {}
+    for op in g.ops:
+        for o in op.operands:
+            uses[o] = uses.get(o, 0) + 1
+    for o in g.outputs:
+        uses[o] = uses.get(o, 0) + 1
+    return uses
+
+
+def producers(g: Graph) -> Dict[int, int]:
+    """SSA id -> index of the op producing it (args absent)."""
+    return {op.result: i for i, op in enumerate(g.ops)}
+
+
+def _clone_args(g: Graph, name: str) -> Tuple[Graph, Dict[int, int]]:
+    new = Graph(name=name)
+    new.values = list(g.values[:g.n_args])
+    new.n_args = g.n_args
+    return new, {i: i for i in range(g.n_args)}
+
+
+def check_legal(old: Graph, new: Graph, *, preserve_outputs: bool = True,
+                oracle_check: Optional[Callable[[Graph, Graph], bool]]
+                = None) -> Graph:
+    """Legality gate every ``apply`` returns through: SSA-valid, and (for
+    output-preserving rules) the same number of outputs with unchanged
+    shape and dtype. ``oracle_check(old, new)`` is the pluggable
+    equivalence hook — e.g. analyzer-target non-increase for CSE/DCE, or
+    a numeric executor when one exists."""
+    new.validate()
+    if preserve_outputs:
+        assert len(new.outputs) == len(old.outputs), \
+            f"output arity changed: {len(old.outputs)}->{len(new.outputs)}"
+        for a, b in zip(old.outputs, new.outputs):
+            ta, tb = old.values[a], new.values[b]
+            assert ta.shape == tb.shape, f"output shape {ta}->{tb}"
+            assert ta.dtype == tb.dtype, f"output dtype {ta}->{tb}"
+    if oracle_check is not None:
+        assert oracle_check(old, new), "oracle-equivalence check failed"
+    return new
+
+
+class Rewrite:
+    """Uniform rewrite interface; subclasses are stateless and shared."""
+
+    name: str = "rewrite"
+    # False: the rule changes intermediate dtypes (precision tradeoff)
+    preserves_dtypes: bool = True
+    # False: the rule may change output arity (unroll replicates outputs)
+    preserves_outputs: bool = True
+
+    def applicable(self, g: Graph) -> List[Site]:
+        raise NotImplementedError
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        raise NotImplementedError
+
+
+REGISTRY: Dict[str, Rewrite] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate (default construction) and register."""
+    inst = cls()
+    REGISTRY[inst.name] = inst
+    return cls
+
+
+def default_rules() -> List[Rewrite]:
+    """Every registered rule, in stable (name) order."""
+    return [REGISTRY[k] for k in sorted(REGISTRY)]
+
+
+# ------------------------------------------------------------------ fusion
+def _fusable(op) -> bool:
+    return op.opcode in ELEMENTWISE or op.opcode == FUSED_OP
+
+
+def _chain_parts(op) -> List[str]:
+    if op.opcode == FUSED_OP:
+        return str(op.attrs.get("chain", FUSED_OP)).split("|")
+    return [op.opcode]
+
+
+@register
+class FuseElementwise(Rewrite):
+    """Collapse a producer→consumer elementwise chain into one ``fused``
+    op. A chain extends through unary elementwise/fused consumers whose
+    operand has exactly one use; the head may be any elementwise op (its
+    operands become the fused op's operands)."""
+
+    name = "fuse_elementwise"
+
+    def chains(self, g: Graph) -> List[List[int]]:
+        uses, prod = use_counts(g), producers(g)
+        chains: List[List[int]] = []
+        chain_of: Dict[int, List[int]] = {}
+        for i, op in enumerate(g.ops):
+            if not (_fusable(op) and len(op.operands) == 1):
+                continue
+            src = op.operands[0]
+            j = prod.get(src)
+            if j is None or not _fusable(g.ops[j]) or uses.get(src) != 1:
+                continue
+            ch = chain_of.get(j)
+            if ch is None:
+                ch = [j]
+                chains.append(ch)
+                chain_of[j] = ch
+            ch.append(i)
+            chain_of[i] = ch
+        return chains
+
+    def applicable(self, g: Graph) -> List[Site]:
+        return [Site(self.name, tuple(ch)) for ch in self.chains(g)]
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        return _fuse(g, [list(site.detail)])
+
+
+def _fuse(g: Graph, chains: List[List[int]]) -> Graph:
+    members = {i for ch in chains for i in ch}
+    last = {ch[-1]: ch for ch in chains}
+    new, id_map = _clone_args(g, g.name if g.name.endswith("_fused")
+                              else g.name + "_fused")
+    for i, op in enumerate(g.ops):
+        if i in members and i not in last:
+            continue
+        if i in last:
+            ch = last[i]
+            head = g.ops[ch[0]]
+            parts = [p for j in ch for p in _chain_parts(g.ops[j])]
+            nid = new.add_op(FUSED_OP,
+                             [id_map[o] for o in head.operands],
+                             g.values[op.result],
+                             n_fused=len(parts), chain="|".join(parts))
+        else:
+            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
+                             g.values[op.result], **op.attrs)
+        id_map[op.result] = nid
+    new.outputs = [id_map[o] for o in g.outputs]
+    return check_legal(g, new)
+
+
+def fuse_elementwise(g: Graph) -> Graph:
+    """Fuse every producer→consumer elementwise chain into single
+    ``xpu.fused`` ops (each carrying ``n_fused`` + ``chain`` attrs), the
+    graph-level operator-fusion transform. Runs to fixpoint; a graph with
+    no chains is returned as a (renamed) structural copy."""
+    rule: FuseElementwise = REGISTRY["fuse_elementwise"]  # type: ignore
+    out = g
+    for _ in range(4):                 # chains are maximal; 1 pass + slack
+        chains = rule.chains(out)
+        if not chains:
+            break
+        out = _fuse(out, chains)
+    return out
+
+
+# --------------------------------------------------------------------- CSE
+def _op_signature(g: Graph, op) -> Tuple:
+    return (op.opcode, tuple(op.operands),
+            tuple(sorted(op.attrs.items())), g.values[op.result])
+
+
+@register
+class CommonSubexpression(Rewrite):
+    """Dedup structurally-identical ops: same opcode, same operand ids,
+    same attrs, same result type. Transitively-equal subtrees converge
+    under repeated application (each merge makes the parents' operand
+    lists equal)."""
+
+    name = "cse"
+
+    def applicable(self, g: Graph) -> List[Site]:
+        seen: Dict[Tuple, int] = {}
+        sites = []
+        for i, op in enumerate(g.ops):
+            sig = _op_signature(g, op)
+            if sig in seen:
+                sites.append(Site(self.name, (i, seen[sig])))
+            else:
+                seen[sig] = i
+        return sites
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        dup, canon = site.detail
+        assert _op_signature(g, g.ops[dup]) == \
+            _op_signature(g, g.ops[canon]), "stale CSE site"
+        new, id_map = _clone_args(g, g.name)
+        for i, op in enumerate(g.ops):
+            if i == dup:
+                id_map[op.result] = id_map[g.ops[canon].result]
+                continue
+            id_map[op.result] = new.add_op(
+                op.opcode, [id_map[o] for o in op.operands],
+                g.values[op.result], **op.attrs)
+        new.outputs = [id_map[o] for o in g.outputs]
+        return check_legal(g, new)
+
+
+# --------------------------------------------------------------------- DCE
+@register
+class DeadOpElimination(Rewrite):
+    """Drop an op whose result has no uses and is not a graph output."""
+
+    name = "dce"
+
+    def applicable(self, g: Graph) -> List[Site]:
+        uses = use_counts(g)
+        return [Site(self.name, (i,)) for i, op in enumerate(g.ops)
+                if uses.get(op.result, 0) == 0]
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        (dead,) = site.detail
+        new, id_map = _clone_args(g, g.name)
+        for i, op in enumerate(g.ops):
+            if i == dead:
+                continue
+            id_map[op.result] = new.add_op(
+                op.opcode, [id_map[o] for o in op.operands],
+                g.values[op.result], **op.attrs)
+        new.outputs = [id_map[o] for o in g.outputs]
+        return check_legal(g, new)
+
+
+# --------------------------------------------------- recompute vs materialize
+@register
+class RecomputeCheapProducer(Rewrite):
+    """Give each consumer of a cheap (elementwise) fan-out producer its
+    own private copy. Alone this adds arithmetic; its value is that each
+    copy is single-use, so fusion can then swallow it into its consumer
+    — the classic recompute-instead-of-materialize tradeoff, discovered
+    by the *search over sequences* rather than any one-shot advisor."""
+
+    name = "recompute"
+
+    def applicable(self, g: Graph) -> List[Site]:
+        sites = []
+        for i, op in enumerate(g.ops):
+            if not (_fusable(op)):
+                continue
+            consumers = [j for j, c in enumerate(g.ops)
+                         if op.result in c.operands]
+            if len(consumers) >= 2:
+                sites.append(Site(self.name, (i,)))
+        return sites
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        (pi,) = site.detail
+        prod = g.ops[pi]
+        consumers = [j for j, c in enumerate(g.ops)
+                     if prod.result in c.operands]
+        assert len(consumers) >= 2, "stale recompute site"
+        new, id_map = _clone_args(g, g.name)
+        for i, op in enumerate(g.ops):
+            operands = [id_map[o] for o in op.operands]
+            if i in consumers[1:]:
+                clone = new.add_op(prod.opcode,
+                                   [id_map[o] for o in prod.operands],
+                                   g.values[prod.result], **prod.attrs)
+                operands = [clone if o == prod.result else id_map[o]
+                            for o in op.operands]
+            id_map[op.result] = new.add_op(
+                op.opcode, operands, g.values[op.result], **op.attrs)
+        new.outputs = [id_map[o] for o in g.outputs]
+        return check_legal(g, new)
+
+
+# ---------------------------------------------------------- dtype narrowing
+@register
+class DtypeNarrow(Rewrite):
+    """Narrow every f32 *intermediate* (op results that are not graph
+    outputs) to bf16. Graph outputs keep their shape AND dtype, so the
+    interface is preserved; the tokenizer emits ``...xbf16`` shape tokens
+    for the narrowed values, and the roofline oracle charges half the
+    HBM bytes for them."""
+
+    name = "dtype_narrow"
+    preserves_dtypes = False
+
+    def applicable(self, g: Graph) -> List[Site]:
+        outs = set(g.outputs)
+        if any(op.result not in outs
+               and g.values[op.result].dtype == "f32" for op in g.ops):
+            return [Site(self.name)]
+        return []
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        outs = set(g.outputs)
+        new, id_map = _clone_args(g, g.name)
+        for op in g.ops:
+            t = g.values[op.result]
+            if op.result not in outs and t.dtype == "f32":
+                t = Tensor(t.shape, "bf16")
+            id_map[op.result] = new.add_op(
+                op.opcode, [id_map[o] for o in op.operands], t, **op.attrs)
+        new.outputs = [id_map[o] for o in g.outputs]
+        return check_legal(g, new)
+
+
+# ------------------------------------------------------------------ unroll
+def unroll_graph(g: Graph, factor: int) -> Graph:
+    """Model loop unrolling of the graph body: replicate ops with renamed
+    SSA ids (shared args), as an unrolled inner loop would look to the
+    cost model."""
+    new = Graph(name=f"{g.name}_u{factor}")
+    new.values = list(g.values[:g.n_args])
+    new.n_args = g.n_args
+    outs = []
+    for _ in range(factor):
+        id_map = {i: i for i in range(g.n_args)}
+        for op in g.ops:
+            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
+                             g.values[op.result], **op.attrs)
+            id_map[op.result] = nid
+        outs.extend(id_map[o] for o in g.outputs)
+    new.outputs = outs
+    new.validate()
+    return new
+
+
+@register
+class Unroll(Rewrite):
+    """Unroll the body by a factor; per-replica outputs keep the original
+    shapes, so Site.weight = factor lets an objective judge per-iteration
+    cost. ``max_ops`` bounds the unrolled size (None disables)."""
+
+    name = "unroll"
+    preserves_outputs = False
+
+    def __init__(self, factors: Tuple[int, ...] = (2, 4),
+                 max_ops: Optional[int] = 64):
+        self.factors = tuple(factors)
+        self.max_ops = max_ops
+
+    def applicable(self, g: Graph) -> List[Site]:
+        return [Site(self.name, (f,), weight=f) for f in self.factors
+                if g.ops and (self.max_ops is None
+                              or len(g.ops) * f <= self.max_ops)]
+
+    def apply(self, g: Graph, site: Site) -> Graph:
+        (factor,) = site.detail
+        return check_legal(g, unroll_graph(g, factor),
+                           preserve_outputs=False)
+
+
+# ------------------------------------------------------- corpus augmentation
+def random_rewrite(g: Graph, rng, rules: Optional[List[Rewrite]] = None,
+                   max_steps: int = 3) -> Graph:
+    """Apply 1..max_steps randomly-chosen legal rewrites (uniform over
+    *rules* first, then over that rule's sites, so rare rules stay
+    represented). Deterministic given the rng state — the dataset
+    builder's two-pass count-then-encode contract — and the way fused /
+    bf16 IR text gets into training corpora (and hence the vocab)."""
+    rules = list(rules) if rules is not None else default_rules()
+    out = g
+    for _ in range(int(rng.integers(1, max_steps + 1))):
+        firing = [(r, s) for r in rules
+                  for s in [r.applicable(out)] if s]
+        if not firing:
+            break
+        rule, sites = firing[int(rng.integers(0, len(firing)))]
+        out = rule.apply(out, sites[int(rng.integers(0, len(sites)))])
+    return out

@@ -1,0 +1,368 @@
+"""repro.opt: rewrite legality, struct-key dedup, batched beam search
+through the serving stack, and the closed-loop oracle acceptance bar."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.costmodel import CostModelConfig
+from repro.core import augment as AUG
+from repro.core import models as CM
+from repro.core import tokenizer as TOK
+from repro.core import trainer as TR
+from repro.core.server import CostModelServer
+from repro.core.service import CostModelService
+from repro.ir import analyzers, dataset as DS, samplers
+from repro.ir.graph import FUSED_OP, Graph, Tensor
+from repro.opt import evaluate as OE
+from repro.opt import rewrites as RW
+from repro.opt import search as SE
+
+
+# --------------------------------------------------------------- fixtures
+def _chain_graph():
+    t = Tensor((8, 128))
+    g = Graph(name="chain")
+    a = g.add_arg(t)
+    x = g.add_op("relu", [a], t)
+    x = g.add_op("tanh", [x], t)
+    x = g.add_op("sigmoid", [x], t)
+    g.outputs = [x]
+    return g
+
+
+def _dead_op_graph():
+    t = Tensor((4, 64))
+    g = Graph(name="dead")
+    a = g.add_arg(t)
+    live = g.add_op("relu", [a], t)
+    g.add_op("exp", [a], t)            # never used, not an output
+    g.outputs = [live]
+    return g
+
+
+@pytest.fixture(scope="module")
+def untrained_service():
+    """Untrained multi-head service: scheduling/caching semantics only."""
+    cfg = CostModelConfig(name="opt-test", vocab_size=512, max_seq=160,
+                          embed_dim=16, conv_channels=(16,) * 6,
+                          fc_dims=(32, 16))
+    rng = np.random.default_rng(3)
+    graphs = [samplers.sample_graph(rng) for _ in range(24)]
+    vocab = TOK.fit_vocab([TOK.graph_tokens(g, "ops") for g in graphs],
+                          max_size=512)
+    params = CM.conv_init(jax.random.PRNGKey(0), cfg,
+                          heads=CM.DEFAULT_HEADS)
+    stats = {t: {"mu": 0.3, "sigma": 1.7} for t in CM.DEFAULT_HEADS}
+    return CostModelService("conv1d", cfg, params, vocab, stats,
+                            mode="ops", max_seq=160)
+
+
+@pytest.fixture(scope="module")
+def trained_service():
+    """Cost model trained on a rewrite-augmented corpus, so fused/bf16
+    IR is in-vocabulary and the search has real guidance."""
+    cfg = CostModelConfig(name="opt-trained", vocab_size=4096, max_seq=160,
+                          embed_dim=64, conv_channels=(64,) * 6,
+                          fc_dims=(256, 64))
+    ds = DS.build_dataset(600, mode="ops", max_seq=160, vocab_size=4096,
+                          augment_factor=1, rewrite_factor=1, seed=9)
+    tr, _ = ds.split(0.1)
+    res = TR.TrainEngine("conv1d", cfg, CM.DEFAULT_HEADS, steps=250,
+                         batch_size=128, lr=2e-3, seed=9).fit(tr)
+    return CostModelService("conv1d", cfg, res.params, ds.vocab,
+                            res.norm_stats, mode="ops", max_seq=160)
+
+
+class CountingProxy:
+    """Duck-typed service wrapper counting predict_all calls."""
+
+    def __init__(self, svc):
+        self.svc = svc
+        self.calls = 0
+
+    @property
+    def heads(self):
+        return self.svc.heads
+
+    def resolve_target(self, t):
+        return self.svc.resolve_target(t)
+
+    def predict_all(self, graphs):
+        self.calls += 1
+        return self.svc.predict_all(graphs)
+
+
+# ----------------------------------------------------------------- fusion
+def test_fuse_emits_single_fused_op():
+    """Satellite: a fused chain is ONE `fused` op with n_fused/chain
+    attrs — visibly different IR text — not a re-emitted producer."""
+    g = _chain_graph()
+    f = RW.fuse_elementwise(g)
+    assert len(f.ops) == 1                       # old chain collapsing
+    op = f.ops[0]
+    assert op.opcode == FUSED_OP
+    assert op.attrs["n_fused"] == 3
+    assert op.attrs["chain"] == "relu|tanh|sigmoid"
+    assert f.values[f.outputs[0]] == g.values[g.outputs[0]]
+    # the tokenizer sees the transform in the text
+    assert "xpu.fused" in TOK.graph_tokens(f, "ops")
+    # and the oracle charges one HBM round trip instead of three
+    assert analyzers.latency_us(f) < analyzers.latency_us(g)
+    assert analyzers.valu_utilization(f) == analyzers.valu_utilization(g)
+
+
+def test_fuse_respects_fanout_and_outputs():
+    """A multi-use intermediate (or one that is a graph output) must not
+    be swallowed into a fusion group."""
+    t = Tensor((8, 128))
+    g = Graph(name="fanout")
+    a = g.add_arg(t)
+    x = g.add_op("relu", [a], t)
+    y = g.add_op("tanh", [x], t)
+    z = g.add_op("exp", [x], t)        # second consumer of x
+    g.outputs = [y, z]
+    f = RW.fuse_elementwise(g)
+    assert len(f.ops) == 3             # nothing legal to fuse
+    # fused chains re-fuse with downstream consumers (n_fused adds up)
+    g2 = _chain_graph()
+    s1 = RW.REGISTRY["fuse_elementwise"].applicable(g2)
+    partial = RW.REGISTRY["fuse_elementwise"].apply(
+        g2, RW.Site("fuse_elementwise", s1[0].detail[:2]))
+    full = RW.fuse_elementwise(partial)
+    assert len(full.ops) == 1 and full.ops[0].attrs["n_fused"] == 3
+
+
+# -------------------------------------------------------------- struct key
+def test_struct_key_invariant_under_renumber_and_reorder():
+    """Satellite: canonical hash is stable under SSA id renumbering and
+    topological re-scheduling of independent ops, and sensitive to any
+    real structural change."""
+    rng = np.random.default_rng(0)
+    for fam in sorted(samplers.SAMPLERS):
+        g = samplers.sample_graph(rng, fam)
+        k = g.struct_key()
+        for _ in range(4):
+            r = AUG.reorder_ops(g, rng)   # re-schedule + renumber SSA
+            assert r.struct_key() == k
+        if g.ops:
+            mut = AUG.reorder_ops(g, rng)
+            mut.ops[-1].attrs = dict(mut.ops[-1].attrs, mutated=1)
+            assert mut.struct_key() != k
+
+
+def test_struct_key_is_the_service_lru_key(untrained_service):
+    """The LRU and the search dedup share one canonical identity: a
+    re-scheduled spelling of a cached program is a cache hit."""
+    svc = untrained_service
+    rng = np.random.default_rng(1)
+    g = samplers.sample_graph(rng, "bert")
+    assert svc.entry(g)[0] == g.struct_key()
+    reordered = AUG.reorder_ops(g, rng)
+    with svc._cache_lock:
+        svc._cache.clear()
+    out1 = svc.predict_all([g])
+    out2 = svc.predict_all([reordered])
+    assert len(svc._cache) == 1
+    for t in svc.heads:
+        np.testing.assert_array_equal(out1[t], out2[t])
+
+
+# ---------------------------------------------------------------- legality
+def _site_pool():
+    """Sampled graphs from all five families + handcrafted graphs that
+    guarantee every rule has at least one applicable site."""
+    rng = np.random.default_rng(5)
+    pool = [samplers.sample_graph(rng, fam)
+            for fam in sorted(samplers.SAMPLERS) for _ in range(2)]
+    pool += [_chain_graph(), _dead_op_graph()]
+    return pool
+
+
+def test_rewrite_legality_every_rule_every_site():
+    """Satellite: every registered rule, at every applicable site of the
+    pool, yields a validate()-clean graph with unchanged output shapes;
+    CSE/DCE additionally never make any analyzer target worse (latency
+    and vALU within float tolerance; pressure may grow by at most one
+    live tile when a merged value's live range extends)."""
+    pool = _site_pool()
+    fired = {r.name: 0 for r in RW.default_rules()}
+    for g in pool:
+        base = analyzers.analyze(g)
+        for rule in RW.default_rules():
+            for site in rule.applicable(g):
+                ng = rule.apply(g, site)   # check_legal runs inside
+                fired[rule.name] += 1
+                outs = [ng.values[o] for o in ng.outputs]
+                want = [g.values[o] for o in g.outputs]
+                if rule.preserves_outputs:
+                    assert [t.shape for t in outs] == \
+                        [t.shape for t in want]
+                    if rule.preserves_dtypes:
+                        assert outs == want
+                else:                      # unroll: shapes per replica
+                    n = len(want)
+                    assert [t.shape for t in outs[:n]] == \
+                        [t.shape for t in want]
+                if rule.name in ("cse", "dce"):
+                    after = analyzers.analyze(ng)
+                    tol = 1e-9
+                    assert after["latency_us"] <= \
+                        base["latency_us"] * (1 + tol)
+                    assert after["valu_utilization"] <= \
+                        base["valu_utilization"]
+                    assert after["register_pressure"] <= \
+                        base["register_pressure"] + analyzers.TILE_VREGS
+    assert all(n > 0 for n in fired.values()), fired
+
+
+def test_oracle_equivalence_hook():
+    """check_legal's pluggable oracle hook gates an apply."""
+    g = _dead_op_graph()
+    site = RW.REGISTRY["dce"].applicable(g)[0]
+    ng = RW.REGISTRY["dce"].apply(g, site)
+    RW.check_legal(g, ng, oracle_check=lambda a, b: (
+        analyzers.latency_us(b) <= analyzers.latency_us(a)))
+    with pytest.raises(AssertionError, match="oracle"):
+        RW.check_legal(g, ng, oracle_check=lambda a, b: False)
+
+
+# ------------------------------------------------------------------ search
+def test_one_predict_all_per_frontier_expansion(untrained_service):
+    """Acceptance: every frontier expansion is exactly ONE batched
+    predict_all (+1 for costing the root)."""
+    proxy = CountingProxy(untrained_service)
+    rng = np.random.default_rng(2)
+    g = samplers.sample_graph(rng, "bert")
+    res = SE.beam_search(proxy, g, beam_width=3, max_steps=4,
+                         eval_budget=64)
+    assert res.expansions >= 1
+    assert proxy.calls == 1 + res.expansions == res.predict_calls
+    assert res.evaluated <= 64
+
+
+def test_search_dedups_frontier_and_respects_budget(untrained_service):
+    """Struct-key dedup: the same program derived through two rewrite
+    orders is costed once; the candidate budget is a hard cap."""
+    proxy = CountingProxy(untrained_service)
+    rng = np.random.default_rng(4)
+    g = samplers.sample_graph(rng, "bert")
+    res = SE.beam_search(proxy, g, beam_width=4, max_steps=6,
+                         record_candidates=True, eval_budget=48)
+    keys = [c.struct_key() for c, _ in res.candidates]
+    assert len(keys) == len(set(keys))
+    assert res.evaluated <= 48
+
+
+def test_greedy_mode_stops_and_unroll_needs_optin(untrained_service):
+    g = _chain_graph()
+    res = SE.greedy_search(untrained_service, g,
+                           rules=[RW.REGISTRY["fuse_elementwise"]])
+    # one chain -> at most one improving step, then a stopping expansion
+    assert len(res.best_seq) <= 1
+    # output-arity-changing rules never become replacement candidates
+    # unless explicitly admitted
+    res2 = SE.beam_search(untrained_service, g,
+                          rules=[RW.Unroll(factors=(2,))], max_steps=2)
+    assert res2.evaluated == 0
+    res3 = SE.beam_search(untrained_service, g,
+                          rules=[RW.Unroll(factors=(2,))], max_steps=1,
+                          preserve_outputs=False)
+    assert res3.evaluated == 1
+
+
+def test_objective_register_budget_constrains(untrained_service):
+    """The composite objective is a hard constraint: candidates over the
+    register budget score inf and the incumbent survives."""
+    # expm1-denormalized pressure is always > -1: nothing is feasible
+    obj = SE.Objective(register_budget=-1.0)
+    rng = np.random.default_rng(6)
+    g = samplers.sample_graph(rng, "bert")
+    res = SE.beam_search(untrained_service, g, objective=obj, max_steps=2)
+    assert res.best_seq == [] and res.best is g
+
+
+def test_objective_refuses_budget_without_pressure_head(untrained_service):
+    """Requesting a finite register budget against a service that cannot
+    serve the pressure head is an error, never a silently-dropped
+    constraint (same policy as UnrollAdvisor)."""
+    svc = untrained_service
+    single = CostModelService(
+        "conv1d", svc.cfg,
+        CM.conv_init(jax.random.PRNGKey(0), svc.cfg), svc.vocab,
+        {"mu": 0.0, "sigma": 1.0}, mode="ops", max_seq=svc.max_seq,
+        target="latency_us")
+    with pytest.raises(ValueError, match="register_budget"):
+        SE.Objective(register_budget=64.0).bind(single)
+    # infinite budget: pure latency, no pressure head needed
+    assert SE.Objective().bind(single).reg_t is None
+
+
+# ------------------------------------------------- closed loop / acceptance
+def test_replay_reproduces_search(untrained_service):
+    rng = np.random.default_rng(8)
+    g = samplers.sample_graph(rng, "bert")
+    res = SE.beam_search(untrained_service, g, beam_width=3, max_steps=3)
+    final = OE.replay(res)
+    assert final.struct_key() == res.best.struct_key()
+
+
+def test_beam_search_beats_fusion_baseline_on_oracle(trained_service):
+    """Acceptance bar: over >=20 graphs from all five samplers, beam
+    search with the full rule set — served through the async
+    micro-batching gateway — achieves mean ORACLE latency no worse than
+    the one-shot greedy fusion baseline, strictly better on at least a
+    quarter, with every expansion one batched predict_all."""
+    rng = np.random.default_rng(10)
+    fams = sorted(samplers.SAMPLERS)
+    graphs = [samplers.sample_graph(rng, fams[i % len(fams)])
+              for i in range(20)]
+    with CostModelServer(trained_service, max_batch=64,
+                         flush_us=500) as server:
+        report = OE.evaluate_search(server, graphs, beam_width=3,
+                                    max_steps=4, eval_budget=128)
+    s = report["summary"]
+    assert s["n_graphs"] == 20
+    assert s["mean_oracle_best_us"] <= s["mean_oracle_baseline_us"] + 1e-9
+    assert s["frac_strictly_better_than_baseline"] >= 0.25
+    # per-graph: every frontier expansion was one batched predict_all
+    # (plus the single root-costing call)
+    for r in report["per_graph"]:
+        assert r["predict_calls"] == 1 + r["expansions"]
+    # rank correlation is reported at both granularities: pooled (graphs
+    # of different sizes — the model must at least order those) and mean
+    # within-search (near-tie candidates; noisy by nature, so only its
+    # presence/range is asserted — the oracle outcomes above are the bar)
+    assert s["spearman_pred_oracle_pooled"] > 0.3
+    assert -1.0 <= s["spearman_pred_oracle"] <= 1.0
+
+
+def test_advisors_are_search_wrappers(trained_service):
+    """The migrated advisors keep their contracts on a trained model."""
+    from repro.core.service import FusionAdvisor, UnrollAdvisor
+    rng = np.random.default_rng(11)
+    fusion = FusionAdvisor(trained_service)
+    do_fuse, c0, c1 = fusion.advise(_chain_graph())
+    assert isinstance(do_fuse, bool) and c0 > 0 and c1 > 0
+    unroll = UnrollAdvisor(trained_service, register_budget=1e9)
+    out = unroll.advise(samplers.sample_graph(rng, "bert"),
+                        factors=(1, 2, 4))
+    assert out["best_factor"] in (1, 2, 4)
+    assert set(out["per_iter_latency"]) == {1, 2, 4}
+
+
+# ----------------------------------------------------------------- dataset
+def test_dataset_rewrite_factor_streaming_determinism():
+    """rewrite_factor rides the two-pass count-then-encode build: two
+    builds are identical, row count scales, and targets stay finite."""
+    kw = dict(mode="ops", max_seq=96, vocab_size=1024, augment_factor=1,
+              rewrite_factor=1, seed=13)
+    d1 = DS.build_dataset(30, **kw)
+    d2 = DS.build_dataset(30, **kw)
+    assert len(d1) == 60
+    np.testing.assert_array_equal(d1.ids, d2.ids)
+    for t in d1.targets:
+        np.testing.assert_array_equal(d1.targets[t], d2.targets[t])
+        assert np.isfinite(d1.targets[t]).all()
+    # rewritten rows really differ from their base graphs somewhere
+    assert any((d1.ids[2 * i + 1] != d1.ids[2 * i]).any()
+               for i in range(30))
