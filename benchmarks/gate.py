@@ -10,9 +10,17 @@
   improvement fell below the greedy one-shot fusion baseline's (within
   ``--opt-tolerance``) — i.e. if the model-guided search stopped beating
   the single-rule advisor it replaced.
+* ``search_fleet`` — fails if (a) the steady-state fleet's
+  candidates-costed/s with the incremental hashing + encode_many hot
+  path fell below ``--fleet-min-ratio`` x the from-scratch baseline
+  (the hot-path refactor stopped paying for itself), or (b) bf16
+  serving's per-target Spearman vs f32 on the candidate corpus dropped
+  below ``--bf16-spearman`` (quantized serving stopped ranking like
+  full precision).
 
     python benchmarks/gate.py bench-artifacts/BENCH_serve_concurrent.json
     python benchmarks/gate.py bench-artifacts/BENCH_opt_search.json
+    python benchmarks/gate.py bench-artifacts/BENCH_search_fleet.json
 """
 from __future__ import annotations
 
@@ -57,9 +65,37 @@ def gate_opt_search(rec, args) -> int:
     return 0
 
 
+def gate_search_fleet(rec, args) -> int:
+    r = rec["result"]
+    ratio = r["speedup_vs_baseline"]
+    fleet = r.get("fleet_steady_speedup_vs_baseline", 0.0)
+    cold = r.get("cold_speedup_vs_baseline", 0.0)
+    sp = r["bf16"]["spearman_min"]
+    print(f"search_fleet: per-worker steady fast path {ratio:.2f}x "
+          f"baseline candidates/s (fleet steady {fleet:.2f}x, cold "
+          f"{cold:.2f}x; gate: >= {args.fleet_min_ratio:.2f}x); "
+          f"bf16 spearman_min={sp:.4f} "
+          f"(gate: >= {args.bf16_spearman:.2f}; max_rel_err="
+          f"{r['bf16']['max_rel_err_all']:.3f})")
+    rc = 0
+    if ratio < args.fleet_min_ratio:
+        print("PERF GATE FAILED: incremental hashing/encoding hot path "
+              "is not beating the from-scratch baseline at fleet scale",
+              file=sys.stderr)
+        rc = 1
+    if sp < args.bf16_spearman:
+        print("DRIFT GATE FAILED: bf16 serving no longer ranks like f32",
+              file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print("perf gate passed")
+    return rc
+
+
 GATES = {
     "serve_concurrent": gate_serve_concurrent,
     "opt_search": gate_opt_search,
+    "search_fleet": gate_search_fleet,
 }
 
 
@@ -75,6 +111,13 @@ def main() -> int:
     ap.add_argument("--opt-tolerance", type=float, default=0.01,
                     help="opt_search: slack on beam-vs-baseline oracle "
                          "improvement (absolute)")
+    ap.add_argument("--fleet-min-ratio", type=float, default=2.0,
+                    help="search_fleet: minimum steady-state "
+                         "candidates/s ratio of the incremental hot "
+                         "path over the from-scratch baseline")
+    ap.add_argument("--bf16-spearman", type=float, default=0.99,
+                    help="search_fleet: minimum per-target Spearman of "
+                         "bf16 vs f32 predictions on the bench corpus")
     args = ap.parse_args()
     with open(args.record) as f:
         rec = json.load(f)

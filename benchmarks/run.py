@@ -17,6 +17,12 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
   opt_search        — repro.opt beam search over rewrite sequences
                       through the server vs the one-shot FusionAdvisor
                       baseline (graphs/s + oracle latency improvement).
+  search_fleet      — N concurrent beam_search workers against ONE
+                      CostModelServer gateway: candidates-costed/s with
+                      the incremental hashing + encode_many hot path vs
+                      the from-scratch baseline (flag-switched), plus
+                      cross-search cache hit rates, batch occupancy,
+                      per-phase timing split, and bf16-vs-f32 drift.
   roofline_table    — reads experiments/dryrun/*.json into the §Roofline
                       table (derived = roofline fraction).
 
@@ -410,6 +416,294 @@ def serve_concurrent(full: bool = False, seed: int = 0):
     return out
 
 
+# -------------------------------------------------------------- search_fleet
+def search_fleet(full: bool = False, seed: int = 0):
+    """Fleet-scale concurrent search: N beam_search workers drive ONE
+    async micro-batching CostModelServer gateway.
+
+    Workers optimize the same graph pool in rotated order, the
+    compiler-fleet shape the server was built for: different searches
+    re-derive the same candidates, so requests coalesce in flight and
+    cross-search LRU hits dominate — exactly the regime where candidate
+    *featurization* (struct hashing + tokenization + encoding), not the
+    forward pass, is the hot path. The fleet runs twice over identical
+    work:
+
+    * ``fast``     — incremental struct hashing (rewrites thread parent
+      hash memos), key-first LRU probes, ids cache + parent-delta token
+      splicing, vectorized encode_many.
+    * ``baseline`` — both switched off (``set_incremental_hashing(False)``
+      + ``fast_encode=False``): every candidate pays a full SHA-1 Merkle
+      walk per struct_key call and a full re-lex + dict.get encode, the
+      pre-incremental behavior.
+
+    Reports candidates-costed/s per mode (gate: fast >= ~2x baseline),
+    cache/dedup hit rates, batch occupancy, the tokenize/encode/hash vs
+    forward wall-clock split, and bf16-vs-f32 serving drift (gate:
+    Spearman >= 0.99 per target on the candidate corpus). Weights are
+    untrained — throughput and drift ranking do not depend on them."""
+    from repro.core import tokenizer as TOK
+    from repro.core.server import CostModelServer
+    from repro.core.service import CostModelService
+    from repro.ir import graph as IRG
+    from repro.ir import samplers
+    from repro.opt import rewrites as RW
+    from repro.opt import search as OS
+
+    n_workers = 12 if full else 8
+    n_pool = 10 if full else 5
+    beam, steps, budget = (4, 4, 128) if full else (4, 3, 64)
+    max_batch = 32
+
+    def _unoptimized(g, rng):
+        """Dress a sampled graph up as the *unoptimized* IR a compiler
+        hands the optimizer: naive elementwise chains (fusion fodder),
+        duplicated subexpressions (CSE fodder), and dead ops (DCE
+        fodder), so every search has a rich rewrite frontier instead of
+        the handful of sites already-clean graphs expose."""
+        from repro.ir.graph import ELEMENTWISE, Tensor
+        ew = sorted(ELEMENTWISE)
+        new = IRG.Graph(name=g.name + "_raw")
+        new.values = list(g.values[:g.n_args])
+        new.n_args = g.n_args
+        for op in g.ops:
+            new.add_op(op.opcode, list(op.operands),
+                       g.values[op.result], **op.attrs)
+        new.outputs = list(g.outputs)
+        results = [op.result for op in new.ops]
+        for _ in range(6):               # fusable chains ending in outputs
+            v = results[int(rng.integers(0, len(results)))]
+            for _ in range(int(rng.integers(3, 7))):
+                t = new.values[v]
+                v = new.add_op(ew[int(rng.integers(0, len(ew)))], [v],
+                               Tensor(t.shape, t.dtype))
+            new.outputs.append(v)
+        for _ in range(4):               # duplicate subexpressions (CSE)
+            op = new.ops[int(rng.integers(0, len(new.ops)))]
+            d = new.add_op(op.opcode, list(op.operands),
+                           new.values[op.result], **op.attrs)
+            t = new.values[d]
+            new.outputs.append(
+                new.add_op("relu", [d], Tensor(t.shape, t.dtype)))
+        for _ in range(3):               # dead ops (DCE)
+            v = results[int(rng.integers(0, len(results)))]
+            t = new.values[v]
+            new.add_op("exp", [v], Tensor(t.shape, t.dtype))
+        new.validate()
+        return new
+    cfg = CostModelConfig(name="fleet", vocab_size=4096, max_seq=256,
+                          embed_dim=48, conv_filters=(2,) * 4,
+                          conv_channels=(48,) * 4, fc_dims=(128, 48))
+    rng = np.random.default_rng(seed)
+    fams = sorted(samplers.SAMPLERS)
+    pool = [_unoptimized(samplers.sample_graph(rng, fams[i % len(fams)]),
+                         rng) for i in range(n_pool)]
+    # vocab over the pool + rewritten variants, so fused/bf16 candidate
+    # text is in-vocabulary (as a rewrite_factor training corpus would be)
+    vocab_seqs = [TOK.graph_tokens(g, "ops") for g in pool]
+    vocab_seqs += [TOK.graph_tokens(RW.random_rewrite(g, rng), "ops")
+                   for g in pool for _ in range(3)]
+    vocab = TOK.fit_vocab(vocab_seqs, max_size=4096)
+    heads = CM.DEFAULT_HEADS
+    params = CM.conv_init(jax.random.PRNGKey(seed), cfg, heads=heads)
+    stats = {t: {"mu": 0.0, "sigma": 1.0} for t in heads}
+
+    def make_service(**kw):
+        return CostModelService("conv1d", cfg, params, vocab, stats,
+                                mode="ops", max_seq=256,
+                                max_batch=max_batch,
+                                buckets=(64, 128, 256),
+                                batch_ladder=(1, 2, 4, 8, 16, 32), **kw)
+
+    def run_fleet(svc):
+        """Drive the full fleet once; returns (wall_s, candidates, mode
+        metrics). Caller owns warmup/cache state."""
+        server = CostModelServer(svc, max_batch=max_batch,
+                                 flush_us=150)
+        server.start(warmup=False)
+        results, errs = [], []
+
+        def worker(w):
+            try:
+                gs = pool[w % n_pool:] + pool[:w % n_pool]
+                for g in gs:
+                    results.append(OS.beam_search(
+                        server, g, beam_width=beam, max_steps=steps,
+                        eval_budget=budget))
+            except Exception as e:       # surface, don't hang the bench
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(n_workers)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dt = time.perf_counter() - t0
+        if errs:
+            raise errs[0]
+        m = server.metrics.snapshot(server.queue_depth())
+        server.stop()
+        # every evaluated candidate plus each search's root was costed
+        cands = sum(r.evaluated + 1 for r in results)
+        return dt, cands, m
+
+    out = {"n_workers": n_workers, "n_pool": n_pool,
+           "searches": n_workers * n_pool, "beam": beam,
+           "max_steps": steps, "eval_budget": budget, "modes": {}}
+
+    def _fleet_pass(mode, svc):
+        """One fleet pass under the mode's hashing flag; returns
+        (wall, candidates, server metrics, phase delta)."""
+        prev = IRG.set_incremental_hashing(mode == "fast")
+        try:
+            with svc._cache_lock:
+                svc._phase_s = {k: 0.0 for k in svc._phase_s}
+            dt, cands, m = run_fleet(svc)
+            return dt, cands, m, svc.phase_stats()
+        finally:
+            IRG.set_incremental_hashing(prev)
+
+    modes = ("fast", "baseline")
+    svcs, cold, cstats = {}, {}, {}
+    for mode in modes:
+        svc = make_service(fast_encode=(mode == "fast"))
+        svc.warmup()                     # AOT: no XLA compiles when timed
+        _fleet_pass(mode, svc)           # untimed: python warm
+        with svc._cache_lock:            # cold pass starts cache-cold
+            svc._cache.clear()
+            svc._ids_cache.clear()
+        # cold pass: compulsory misses — forward passes, batching and
+        # cross-search dedup are all on the clock
+        cold[mode] = _fleet_pass(mode, svc)
+        cstats[mode] = svc.cache_stats()
+        svcs[mode] = svc
+    # steady passes: caches stay warm (the long-running-fleet regime the
+    # hot path is built for) — every candidate is still re-derived,
+    # re-hashed, and re-featurized per search, but predictions answer
+    # from the shared LRU, so the clock isolates exactly the
+    # per-candidate featurization cost the incremental path removes.
+    # Modes alternate (fast, baseline, fast, ...) and take best-of-3 so
+    # load drift on a shared runner hits both modes alike.
+    steady = {m: None for m in modes}
+    for _ in range(3):
+        for mode in modes:
+            d, c, _, p = _fleet_pass(mode, svcs[mode])
+            if steady[mode] is None or c / d > \
+                    steady[mode][1] / steady[mode][0]:
+                steady[mode] = (d, c, p)
+
+    def _worker_pass(mode):
+        """One single-worker pass over the warm pool, through the
+        gateway -> candidates/s. The search loop is GIL-bound python, so
+        aggregate fleet candidates/s tracks per-worker per-candidate
+        cost — and single-threaded passes resist shared-runner scheduler
+        noise far better than N-thread wall clock. Best-of-3, modes
+        interleaved (same rationale as the fleet steady passes), is the
+        gated speedup; the fleet wall ratios are reported alongside."""
+        svc = svcs[mode]
+        prev = IRG.set_incremental_hashing(mode == "fast")
+        try:
+            server = CostModelServer(svc, max_batch=max_batch,
+                                     flush_us=150)
+            server.start(warmup=False)
+            cands = 0
+            t0 = time.perf_counter()
+            for g in pool:
+                r = OS.beam_search(server, g, beam_width=beam,
+                                   max_steps=steps, eval_budget=budget)
+                cands += r.evaluated + 1
+            dt = time.perf_counter() - t0
+            server.stop()
+            return cands / dt
+        finally:
+            IRG.set_incremental_hashing(prev)
+
+    worker_cps = {m: 0.0 for m in modes}
+    for _ in range(3):
+        for mode in modes:
+            worker_cps[mode] = max(worker_cps[mode], _worker_pass(mode))
+    for mode in modes:
+        dt_c, cands_c, m, phase = cold[mode]
+        dt_s, cands_s, phase_s = steady[mode]
+        st = cstats[mode]
+        featurize_s = phase["hash_s"] + phase["encode_s"]
+        rec = {"cold": {"wall_s": dt_c, "candidates_costed": cands_c,
+                        "candidates_per_s": cands_c / dt_c},
+               "steady": {"wall_s": dt_s, "candidates_costed": cands_s,
+                          "candidates_per_s": cands_s / dt_s,
+                          "hash_s": phase_s["hash_s"],
+                          "encode_s": phase_s["encode_s"]},
+               "phase_split": {
+                   "hash_s": phase["hash_s"],
+                   "encode_s": phase["encode_s"],
+                   "forward_s": phase["forward_s"],
+                   "featurize_frac_of_wall": featurize_s / dt_c},
+               "lru_hit_rate": st["hit_rate"],
+               "ids_cache_hit_rate": st["ids_hit_rate"],
+               "delta_encodes": phase["delta_encodes"],
+               "full_encodes": phase["full_encodes"],
+               "truncations": st["truncations"],
+               "server": {"requests": m["requests"],
+                          "cache_hit_rate": m["cache_hit_rate"],
+                          "coalesced": m["coalesced"],
+                          "batches": m["batches"],
+                          "batch_occupancy": m["batch_occupancy"]}}
+        out["modes"][mode] = rec
+        _row(f"search_fleet/{mode}_cold", dt_c / cands_c * 1e6,
+             f"cands_s={cands_c / dt_c:.0f};workers={n_workers}"
+             f";lru_hit={st['hit_rate']:.1%}"
+             f";occupancy={m['batch_occupancy']:.1f}"
+             f";hash_ms={phase['hash_s'] * 1e3:.0f}"
+             f";encode_ms={phase['encode_s'] * 1e3:.0f}"
+             f";forward_ms={phase['forward_s'] * 1e3:.0f}")
+        _row(f"search_fleet/{mode}_steady", dt_s / cands_s * 1e6,
+             f"cands_s={cands_s / dt_s:.0f}"
+             f";hash_ms={phase_s['hash_s'] * 1e3:.0f}"
+             f";encode_ms={phase_s['encode_s'] * 1e3:.0f}")
+    speedup = worker_cps["fast"] / worker_cps["baseline"]
+    fleet_speedup = (out["modes"]["fast"]["steady"]["candidates_per_s"]
+                     / out["modes"]["baseline"]["steady"]
+                     ["candidates_per_s"])
+    cold_speedup = (out["modes"]["fast"]["cold"]["candidates_per_s"]
+                    / out["modes"]["baseline"]["cold"]["candidates_per_s"])
+    out["per_worker_steady_cands_s"] = worker_cps
+    out["speedup_vs_baseline"] = speedup      # per-worker steady (gated)
+    out["fleet_steady_speedup_vs_baseline"] = fleet_speedup
+    out["cold_speedup_vs_baseline"] = cold_speedup
+    _row("search_fleet/speedup", 0.0,
+         f"per_worker_steady={speedup:.2f}x"
+         f";fleet_steady={fleet_speedup:.2f}x;cold={cold_speedup:.2f}x")
+
+    # bf16 serving drift vs f32 on the fleet's candidate corpus: same
+    # params, bf16-cast once; gate.py enforces Spearman >= 0.99/target
+    corpus = list(pool)
+    crng = np.random.default_rng(seed + 7)
+    corpus += [RW.random_rewrite(g, crng) for g in pool for _ in range(5)]
+    # tie-averaging + degenerate-safe rank correlation (0.0, not NaN,
+    # when a head collapses — a NaN must not slip past the drift gate)
+    from repro.opt.evaluate import spearman
+    svc_f32 = make_service()
+    svc_bf16 = make_service(dtype="bf16")
+    p32 = svc_f32.predict_all(corpus)
+    pbf = svc_bf16.predict_all(corpus)
+
+    drift = {"spearman": {}, "max_rel_err": {}}
+    for t in heads:
+        drift["spearman"][t] = spearman(p32[t], pbf[t])
+        rel = np.abs(pbf[t] - p32[t]) / np.maximum(np.abs(p32[t]), 1e-9)
+        drift["max_rel_err"][t] = float(rel.max())
+    drift["spearman_min"] = min(drift["spearman"].values())
+    drift["max_rel_err_all"] = max(drift["max_rel_err"].values())
+    out["bf16"] = drift
+    _row("search_fleet/bf16_drift", 0.0,
+         f"spearman_min={drift['spearman_min']:.4f}"
+         f";max_rel_err={drift['max_rel_err_all']:.4f}"
+         f";corpus={len(corpus)}")
+    return out
+
+
 # ---------------------------------------------------------------- opt_search
 def opt_search(full: bool = False, seed: int = 0):
     """Cost-model-guided beam search (repro.opt) vs the one-shot
@@ -457,8 +751,15 @@ def opt_search(full: bool = False, seed: int = 0):
             eval_budget=256 if full else 128)
         dt = time.perf_counter() - t0
         metrics = server.metrics.snapshot()
+    phase = svc.phase_stats()
     s = report["summary"]
     throughput = n_eval / dt
+    _row("opt_search/phase_split", 0.0,
+         f"hash_ms={phase['hash_s'] * 1e3:.0f}"
+         f";encode_ms={phase['encode_s'] * 1e3:.0f}"
+         f";forward_ms={phase['forward_s'] * 1e3:.0f}"
+         f";delta_encodes={phase['delta_encodes']}"
+         f";full_encodes={phase['full_encodes']}")
     _row("opt_search/beam", dt / n_eval * 1e6,
          f"graphs_s={throughput:.2f}"
          f";oracle_impr={s['oracle_improvement_mean']:.1%}"
@@ -472,6 +773,9 @@ def opt_search(full: bool = False, seed: int = 0):
          f";predict_calls={s['predict_calls']}")
     return {"n_eval": n_eval, "throughput_graphs_s": throughput,
             "summary": s, "per_graph": report["per_graph"],
+            "phase_split": {k: phase[k]
+                            for k in ("hash_s", "encode_s", "forward_s",
+                                      "delta_encodes", "full_encodes")},
             "server": {k: metrics[k] for k in
                        ("requests", "batches", "batch_occupancy",
                         "cache_hit_rate")}}
@@ -558,6 +862,7 @@ BENCHES = {
     "serve_bench": serve_bench,
     "serve_concurrent": serve_concurrent,
     "opt_search": opt_search,
+    "search_fleet": search_fleet,
     "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,

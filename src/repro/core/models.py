@@ -127,7 +127,7 @@ def fc_axes(cfg, heads: Optional[Sequence[str]] = None):
 
 def fc_encode(p, ids):
     """Bag-of-tokens pooling + the hidden FC stack -> shared features."""
-    m = _mask(ids)
+    m = _mask(ids).astype(p["emb"].dtype)
     x = p["emb"][ids] * m[..., None]
     x = x.sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)  # bag of tokens
     return fc_stack(p, x)
@@ -164,9 +164,12 @@ def lstm_axes(cfg, heads: Optional[Sequence[str]] = None):
 
 
 def lstm_encode(p, ids):
-    """Masked LSTM scan -> final hidden state as shared features."""
+    """Masked LSTM scan -> final hidden state as shared features.
+
+    Mask and initial state follow the embedding dtype so bf16-cast
+    params run a bf16 scan instead of silently promoting back to f32."""
     x = p["emb"][ids]                       # (B, S, E)
-    m = _mask(ids)
+    m = _mask(ids).astype(x.dtype)
     B = x.shape[0]
     h_dim = p["wh"].shape[0]
     xw = x @ p["wx"] + p["b"]
@@ -184,7 +187,7 @@ def lstm_encode(p, ids):
         return (h_new * keep + h * (1 - keep),
                 c_new * keep + c * (1 - keep)), None
 
-    h0 = jnp.zeros((B, h_dim))
+    h0 = jnp.zeros((B, h_dim), x.dtype)
     (h, _), _ = jax.lax.scan(step, (h0, h0),
                              (xw.transpose(1, 0, 2), m.T))
     return h
@@ -241,8 +244,10 @@ def conv1d(x, w, b):
 def conv_encode(p, ids, *, pooled_only: bool = False):
     """Conv tower + MaxPool (+ hidden FC stack) -> shared features.
 
-    ``pooled_only`` stops after the max-pool (the kernel module's seam)."""
-    x = p["emb"][ids] * _mask(ids)[..., None]   # (B, S, E)
+    ``pooled_only`` stops after the max-pool (the kernel module's seam).
+    The mask follows the embedding dtype (lax.conv is strict about
+    matching dtypes), so bf16-cast params run a bf16 tower."""
+    x = p["emb"][ids] * _mask(ids).astype(p["emb"].dtype)[..., None]
     for layer in p["convs"]:
         x = jax.nn.relu(conv1d(x, layer["w"], layer["b"]))
     x = x.max(axis=1)                            # MaxPool1D over sequence
@@ -301,14 +306,19 @@ def _ln(x, g):
 
 
 def xformer_encode(p, ids):
-    """Masked transformer stack -> mean-pooled features."""
-    m = _mask(ids)
+    """Masked transformer stack -> mean-pooled features.
+
+    Mask and attention bias follow the embedding dtype (bf16 still
+    represents -1e30) so bf16-cast params stay bf16 end to end."""
+    m = _mask(ids).astype(p["emb"].dtype)
     B, S = ids.shape
     d = p["emb"].shape[1]
     h = p["emb"][ids] + p["pos"][:S]
     H = 4  # fixed head count for the cost-model transformer
     dh = d // H
-    neg = (1.0 - m)[:, None, None, :] * -1e30  # mask padded keys
+    # mask padded keys; cast keeps the bias in the embedding dtype
+    # (bf16 represents -1e30) instead of promoting attention to f32
+    neg = ((1.0 - m)[:, None, None, :] * -1e30).astype(m.dtype)
     for blk in p["blocks"]:
         x = _ln(h, blk["ln1"])
         qkv = x @ blk["wqkv"]
@@ -316,7 +326,9 @@ def xformer_encode(p, ids):
         q = q.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
         k = k.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
         v = v.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
-        a = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(dh) + neg
+        # python-float scale (weak-typed): an np.float64 scalar would
+        # promote a bf16 tower back to f32 here
+        a = jnp.einsum("bhqd,bhkd->bhqk", q, k) / float(np.sqrt(dh)) + neg
         w = jax.nn.softmax(a, axis=-1)
         o = jnp.einsum("bhqk,bhkd->bhqd", w, v).transpose(0, 2, 1, 3)
         h = h + o.reshape(B, S, d) @ blk["wo"]

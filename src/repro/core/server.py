@@ -227,13 +227,22 @@ class CostModelServer:
     def submit(self, g: Graph) -> "Future[np.ndarray]":
         """Enqueue one graph; resolves to its (n_heads,) normalized row.
 
-        Fast paths: an LRU hit resolves immediately without queueing; a
-        request whose content hash is already in flight coalesces onto
-        the pending compute. A full queue sheds the request instead."""
+        Fast paths: an LRU hit resolves immediately without queueing —
+        probed by struct key BEFORE any tokenization, so a hit never
+        lexes the graph at all (``fast_encode`` services; the legacy
+        path encodes first, as before); a request whose content hash is
+        already in flight coalesces onto the pending compute. A full
+        queue sheds the request instead."""
         if not self._running:
             raise RuntimeError("server not started (call start())")
-        key, ids = self.service.entry(g)
-        hit = self.service.cache_lookup(key)
+        if self.service.fast_encode:
+            key = self.service.key_of(g)
+            hit = self.service.cache_lookup(key)
+            if hit is None:
+                ids = self.service.ids_for(g, key)
+        else:
+            key, ids = self.service.entry(g)
+            hit = self.service.cache_lookup(key)
         if hit is not None:
             with self._work:
                 self.metrics.note_request(cache_hit=True)

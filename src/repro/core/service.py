@@ -14,6 +14,20 @@ while compiling in order to make the best decisions." This module provides:
 * a bounded LRU prediction cache (per-target vectors keyed by content
   hash) so a long-running compiler session can't grow memory without
   limit.
+* an incremental featurization hot path (``fast_encode``, default): the
+  LRU is probed by struct key BEFORE any tokenization, token-id arrays
+  are cached by struct key, rewrite-derived graphs splice their ids
+  from the parent's cached array (only the rewrite's dirty ops are
+  re-lexed), and fresh batches encode through the vectorized
+  ``Vocab.encode_many``. Phase timers (``phase_stats()``) attribute
+  wall time to hash/encode/forward, and a ``truncations`` counter makes
+  silent past-bucket drops observable.
+* optional bf16 quantized serving (``dtype="bf16"``): params are cast
+  once at construction, forward passes run bf16 over the same
+  (bucket x ladder) program set (so ``warmup()`` covers them), and rows
+  widen to float32 before the LRU so denormalization stays
+  float32-exact. Drift vs f32 is gated in tests and the search_fleet
+  benchmark (Spearman >= 0.99 per target).
 * three compiler advisors built on top of it — since PR 4 each is a thin
   wrapper over a single-rule ``repro.opt`` search (the full multi-rule
   beam search lives in :mod:`repro.opt.search`):
@@ -34,6 +48,7 @@ entry (and coalesce in flight at the server).
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -80,6 +95,18 @@ class CostModelService:
     # name of the single-head model's target (cosmetic for predict_all keys)
     target: Optional[str] = None
     cache_size: int = 4096
+    # Serving precision: "f32" (exact) or "bf16" (params cast once at
+    # construction; forward passes run bf16, rows are widened to float32
+    # before the LRU and denormalize, so the denormalize path stays
+    # float32-exact). Prediction drift vs f32 is gated in tests.
+    dtype: str = "f32"
+    # Hot-path featurization: token-id arrays cached by struct_key,
+    # parent-delta tokenization for rewrite-derived graphs, vectorized
+    # Vocab.encode_many for fresh batches, and LRU probes by key BEFORE
+    # any tokenization. False restores the legacy always-re-lex path —
+    # the flag-switchable baseline the search_fleet benchmark measures.
+    fast_encode: bool = True
+    ids_cache_size: int = 8192
     buckets: Optional[Tuple[int, ...]] = None   # None -> power-of-two ladder
     # batch sizes forward passes are padded up to (None -> power-of-two
     # ladder capped at max_batch). Fixing the set of executed (B, S)
@@ -95,6 +122,9 @@ class CostModelService:
 
     def __post_init__(self):
         _, apply_fn, _ = CM.get_model(self.kind)
+        if self.dtype not in ("f32", "bf16"):
+            raise ValueError(f"dtype must be f32 or bf16, got "
+                             f"{self.dtype!r}")
         # Bake small (fixed, inference-only) params into the jitted
         # callable as constants: per-call python then processes ONE ids
         # array instead of flattening the whole param tree, which is
@@ -104,6 +134,17 @@ class CostModelService:
         # program, so big param trees are committed to device once and
         # passed as an argument instead.
         params = self.params
+        if self.dtype == "bf16":
+            # cast floating leaves ONCE at construction; the (bucket x
+            # ladder) program set stays identical in shape, so warmup()
+            # covers the bf16 programs exactly as it does f32 ones
+            import jax.numpy as jnp
+
+            def _cast(x):
+                a = jnp.asarray(x)
+                return a.astype(jnp.bfloat16) \
+                    if jnp.issubdtype(a.dtype, jnp.floating) else a
+            params = jax.tree.map(_cast, params)
         n_bytes = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params))
         if n_bytes <= 16 * 2**20:
             self._apply = jax.jit(lambda ids: apply_fn(params, ids))
@@ -144,6 +185,21 @@ class CostModelService:
         self._cache_lock = threading.Lock()
         self.cache_hits = 0
         self.cache_misses = 0
+        # token-id arrays keyed by struct_key: (bucket-padded ids, true
+        # token count) — the featurization cache the parent-delta
+        # tokenizer splices from. Guarded by _cache_lock.
+        self._ids_cache: "OrderedDict[str, Tuple[np.ndarray, int]]" = \
+            OrderedDict()
+        self.ids_cache_hits = 0
+        self.ids_cache_misses = 0
+        self.delta_encodes = 0       # spliced from a parent's cached ids
+        self.full_encodes = 0        # tokenized + encoded from scratch
+        # sequences dropped past their bucket by Vocab.encode's silent
+        # truncation — surfaced so bucketed-serving drops are observable
+        self.truncations = 0
+        # wall-clock split of the serving hot path, for benchmark
+        # attribution (tokenize/encode/hash vs forward)
+        self._phase_s = {"hash_s": 0.0, "encode_s": 0.0, "forward_s": 0.0}
         # per-head (mu, sigma) as vectors: denormalizing all heads of a
         # row block is one vectorized expm1, not one call per target
         # float32 so block denorm rounds exactly like the per-target
@@ -160,10 +216,164 @@ class CostModelService:
                 return b
         return self.buckets[-1]
 
+    def _phase_add(self, name: str, dt: float) -> None:
+        with self._cache_lock:
+            self._phase_s[name] += dt
+
+    def phase_stats(self) -> Dict[str, float]:
+        """Cumulative wall-clock split of the serving hot path: struct
+        hashing vs tokenize/encode vs forward passes. Benchmarks emit
+        this so perf PRs can attribute wins per phase."""
+        with self._cache_lock:
+            out = dict(self._phase_s)
+            out["truncations"] = self.truncations
+            out["delta_encodes"] = self.delta_encodes
+            out["full_encodes"] = self.full_encodes
+        return out
+
+    def key_of(self, g: Graph) -> str:
+        """Canonical LRU/dedup key (Graph.struct_key, timed)."""
+        t0 = time.perf_counter()
+        key = g.struct_key()
+        self._phase_add("hash_s", time.perf_counter() - t0)
+        return key
+
+    def _fresh_ids(self, g: Graph) -> Tuple[np.ndarray, int]:
+        """Tokenize + encode from scratch -> (bucket-padded ids, n_tok)."""
+        toks = TOK.graph_tokens(g, self.mode)
+        bucket = self._bucket_len(len(toks))
+        with self._cache_lock:
+            self.full_encodes += 1
+            if len(toks) > bucket:
+                self.truncations += 1
+        return self.vocab.encode(toks, bucket), len(toks)
+
     def _encode(self, g: Graph) -> np.ndarray:
         """Token ids padded to the graph's bucket, not the global max_seq."""
-        toks = TOK.graph_tokens(g, self.mode)
-        return self.vocab.encode(toks, self._bucket_len(len(toks)))
+        t0 = time.perf_counter()
+        ids, _ = self._fresh_ids(g)
+        self._phase_add("encode_s", time.perf_counter() - t0)
+        return ids
+
+    def _delta_ids(self, g: Graph) -> Optional[Tuple[np.ndarray, int]]:
+        """Splice a rewrite-derived graph's token ids from its parent's
+        cached ids: copied op spans are gathered with one vectorized
+        index, only the rewrite's dirty ops (plus the small output tail)
+        are re-lexed. Returns None when no parent ids are cached, the
+        mode is not "ops", or either side truncates (fresh encode then
+        handles — and counts — the truncation)."""
+        delta = g._tok_delta
+        if delta is None or self.mode != "ops":
+            return None
+        parent_key, op_map = delta
+        with self._cache_lock:
+            ent = self._ids_cache.get(parent_key)
+        if ent is None:
+            return None
+        p_ids, p_ntok = ent
+        if p_ntok > len(p_ids):       # parent itself was truncated
+            return None
+        n_args, n_ops = g.n_args, len(g.ops)
+        n_tok = 1 + n_args + 1 + 2 * n_ops + 1 + len(g.outputs) + 1
+        bucket = self._bucket_len(n_tok)
+        if n_tok > bucket:
+            return None
+        out = np.zeros((bucket,), np.int32)          # PAD id is 0
+        base = n_args + 2                            # BOS + args + SEP
+        out[:base] = p_ids[:base]
+        if op_map:
+            ci = np.fromiter(op_map.keys(), np.int64, len(op_map))
+            pi = np.fromiter(op_map.values(), np.int64, len(op_map))
+            dst, src = base + 2 * ci, base + 2 * pi
+            out[dst] = p_ids[src]
+            out[dst + 1] = p_ids[src + 1]
+        t2i = self.vocab.token_to_id
+        unk = t2i[TOK.UNK]
+        for j, op in enumerate(g.ops):               # dirty ops only
+            if j in op_map:
+                continue
+            out[base + 2 * j] = t2i.get(f"xpu.{op.opcode}", unk)
+            out[base + 2 * j + 1] = t2i.get(
+                g.values[op.result].shape_token(), unk)
+        pos = base + 2 * n_ops
+        out[pos] = t2i[TOK.SEP]
+        for k, o in enumerate(g.outputs):
+            out[pos + 1 + k] = t2i.get(g.values[o].shape_token(), unk)
+        out[pos + 1 + len(g.outputs)] = t2i[TOK.EOS]
+        with self._cache_lock:
+            self.delta_encodes += 1
+        return out, n_tok
+
+    def _ids_cache_get(self, key: str) -> Optional[np.ndarray]:
+        with self._cache_lock:
+            ent = self._ids_cache.get(key)
+            if ent is not None:
+                self._ids_cache.move_to_end(key)
+                self.ids_cache_hits += 1
+                return ent[0]
+            self.ids_cache_misses += 1
+        return None
+
+    def _ids_cache_put(self, key: str, ids: np.ndarray,
+                       n_tok: int) -> None:
+        with self._cache_lock:
+            self._ids_cache[key] = (ids, n_tok)
+            self._ids_cache.move_to_end(key)
+            while len(self._ids_cache) > self.ids_cache_size:
+                self._ids_cache.popitem(last=False)
+
+    def ids_for(self, g: Graph, key: str) -> np.ndarray:
+        """Bucket-padded token ids for one graph: ids-cache probe, then
+        the parent-delta splice, then a from-scratch encode (legacy
+        behavior — and the whole path when ``fast_encode=False``)."""
+        if not self.fast_encode:
+            return self._encode(g)
+        ids = self._ids_cache_get(key)
+        if ids is not None:
+            return ids
+        t0 = time.perf_counter()
+        got = self._delta_ids(g)
+        if got is None:
+            got = self._fresh_ids(g)
+        self._phase_add("encode_s", time.perf_counter() - t0)
+        self._ids_cache_put(key, *got)
+        return got[0]
+
+    def entries_for(self, graphs: Sequence[Graph],
+                    keys: Sequence[str]) -> List[Tuple[str, np.ndarray]]:
+        """Batch ``(key, ids)`` entries: cached/delta graphs resolve
+        individually; the remaining fresh ones are tokenized and pushed
+        through ONE vectorized ``Vocab.encode_many`` per bucket."""
+        t0 = time.perf_counter()
+        out: List[Optional[np.ndarray]] = [None] * len(graphs)
+        fresh: List[Tuple[int, str, List[str], int]] = []
+        for i, (g, key) in enumerate(zip(graphs, keys)):
+            ids = self._ids_cache_get(key)
+            if ids is not None:
+                out[i] = ids
+                continue
+            got = self._delta_ids(g)
+            if got is not None:
+                self._ids_cache_put(key, *got)
+                out[i] = got[0]
+                continue
+            toks = TOK.graph_tokens(g, self.mode)
+            bucket = self._bucket_len(len(toks))
+            with self._cache_lock:
+                self.full_encodes += 1
+                if len(toks) > bucket:
+                    self.truncations += 1
+            fresh.append((i, key, toks, bucket))
+        by_bucket: Dict[int, List[Tuple[int, str, List[str]]]] = {}
+        for i, key, toks, bucket in fresh:
+            by_bucket.setdefault(bucket, []).append((i, key, toks))
+        for bucket, group in by_bucket.items():
+            block = self.vocab.encode_many([t for _, _, t in group], bucket)
+            for (i, key, toks), ids in zip(group, block):
+                self._ids_cache_put(key, ids, len(toks))
+                out[i] = ids
+        self._phase_add("encode_s", time.perf_counter() - t0)
+        return list(zip(keys, out))
 
     def entry(self, g: Graph) -> Tuple[str, np.ndarray]:
         """Batch entry for one graph: (struct key, bucket-padded ids).
@@ -181,7 +391,8 @@ class CostModelService:
         graph, not per schedule. Callers that must distinguish
         schedules should query an empty-cache service or embed the
         schedule in the graph structure."""
-        return g.struct_key(), self._encode(g)
+        key = self.key_of(g)
+        return key, self.ids_for(g, key)
 
     def _stats_for(self, t: str) -> Dict[str, float]:
         return self.norm_stats[t] if self._multi else self.norm_stats
@@ -220,9 +431,18 @@ class CostModelService:
         with self._cache_lock:
             hits, misses = self.cache_hits, self.cache_misses
             size = len(self._cache)
+            ids_hits, ids_misses = self.ids_cache_hits, \
+                self.ids_cache_misses
+            ids_size = len(self._ids_cache)
+            truncations = self.truncations
         total = hits + misses
+        ids_total = ids_hits + ids_misses
         return {"hits": hits, "misses": misses, "size": size,
-                "hit_rate": hits / total if total else 0.0}
+                "hit_rate": hits / total if total else 0.0,
+                "ids_hits": ids_hits, "ids_misses": ids_misses,
+                "ids_size": ids_size,
+                "ids_hit_rate": ids_hits / ids_total if ids_total else 0.0,
+                "truncations": truncations}
 
     def _ladder_batch(self, n: int) -> int:
         for b in self.batch_ladder:
@@ -236,22 +456,30 @@ class CostModelService:
         :meth:`forward_collect`. Pads the batch dim up to the ladder with
         all-PAD rows (sliced off at collect), so only |batch_ladder| x
         |buckets| programs ever compile."""
+        t0 = time.perf_counter()
         n = ids.shape[0]
         nb = self._ladder_batch(n)
         if nb != n:
             ids = np.concatenate(
                 [ids, np.zeros((nb - n, ids.shape[1]), ids.dtype)])
-        return self._apply(ids), n
+        handle = self._apply(ids), n
+        self._phase_add("forward_s", time.perf_counter() - t0)
+        return handle
 
     def forward_collect(self, handle: Tuple[Any, int]) -> np.ndarray:
         """Wait for a dispatched forward pass -> (B, n_heads) normalized
-        predictions (padding rows removed)."""
+        predictions (padding rows removed). Rows are widened to float32
+        (a no-op for f32 serving) so a bf16 service's LRU entries and
+        denormalize path stay float32-exact."""
+        t0 = time.perf_counter()
         out, n = handle
         if self._multi:
             out = jax.device_get(out)
-            rows = np.stack([np.asarray(out[t]) for t in self.heads], axis=1)
+            rows = np.stack([np.asarray(out[t], np.float32)
+                             for t in self.heads], axis=1)
         else:
-            rows = np.asarray(out)[:, None]
+            rows = np.asarray(out, np.float32)[:, None]
+        self._phase_add("forward_s", time.perf_counter() - t0)
         return rows[:n]
 
     def _forward(self, ids: np.ndarray) -> np.ndarray:
@@ -312,22 +540,46 @@ class CostModelService:
 
     def predict_all(self, graphs: Sequence[Graph]) -> Dict[str, np.ndarray]:
         """All targets for every graph from one cached, batched, bucketed
-        forward pass. Returns {target: (len(graphs),) denormalized array}."""
+        forward pass. Returns {target: (len(graphs),) denormalized array}.
+
+        Fast path (``fast_encode``, default): the prediction LRU is
+        probed by struct key FIRST — cache hits and in-call duplicates
+        never tokenize at all — and the remaining misses featurize
+        through the ids cache / parent-delta splice / batched
+        ``encode_many``. The legacy path (``fast_encode=False``)
+        tokenizes and encodes every graph before probing, exactly the
+        pre-incremental behavior (the search_fleet baseline)."""
         if not graphs:
             return {t: np.zeros((0,), np.float32) for t in self.heads}
         keys: List[str] = []
         vals: Dict[str, np.ndarray] = {}   # this call's working set: the
         missing: Dict[str, np.ndarray] = {}  # LRU may evict entries mid-call
-        for g in graphs:
-            h, ids = self.entry(g)
-            keys.append(h)
-            if h in vals or h in missing:
-                continue
-            hit = self.cache_lookup(h)
-            if hit is not None:
-                vals[h] = hit
-            else:
-                missing[h] = ids
+        if self.fast_encode:
+            miss_graphs: Dict[str, Graph] = {}
+            for g in graphs:
+                h = self.key_of(g)
+                keys.append(h)
+                if h in vals or h in miss_graphs:
+                    continue
+                hit = self.cache_lookup(h)
+                if hit is not None:
+                    vals[h] = hit
+                else:
+                    miss_graphs[h] = g
+            if miss_graphs:
+                missing = dict(self.entries_for(
+                    list(miss_graphs.values()), list(miss_graphs)))
+        else:
+            for g in graphs:
+                h, ids = self.entry(g)
+                keys.append(h)
+                if h in vals or h in missing:
+                    continue
+                hit = self.cache_lookup(h)
+                if hit is not None:
+                    vals[h] = hit
+                else:
+                    missing[h] = ids
         if missing:
             # group by bucket length: one jitted program per bucket
             by_len: Dict[int, List[Tuple[str, np.ndarray]]] = {}

@@ -29,9 +29,15 @@ from repro.ir.graph import Graph
 PAD, UNK, BOS, EOS, SEP = "<pad>", "<unk>", "<bos>", "<eos>", "<sep>"
 SPECIALS = [PAD, UNK, BOS, EOS, SEP]
 
+# Bare NxMx<dtype> shape tokens: the dtype alternation must cover every
+# MLIR element type the corpus can emit — longer spellings first (``i16``
+# before ``i1``, ``f64`` before ``f6``-style prefixes) so the regex never
+# matches a prefix and shatters the rest of the shape into fragment
+# tokens that become <unk>.
+_SHAPE_DTYPES = r"(?:bf16|f64|f32|f16|i64|i32|i16|i8|i1)"
 _TEXT_TOKEN_RE = re.compile(
     r"%[A-Za-z0-9_]+|\"[a-z_]+\.[a-z0-9_.]+\"|[a-z_]+\.[a-z0-9_.]+"
-    r"|tensor<[^>]*>|\d+x[0-9x]*(?:f32|bf16|f16|i8|i32)"
+    r"|tensor<[^>]*>|\d+x[0-9x]*" + _SHAPE_DTYPES +
     r"|[A-Za-z_][A-Za-z0-9_]*")
 
 
@@ -86,10 +92,54 @@ class Vocab:
         return len(self.token_to_id)
 
     def encode(self, tokens: Sequence[str], max_len: int) -> np.ndarray:
+        """Sequences longer than ``max_len`` are silently truncated —
+        serving layers that bucket-pad surface a truncation counter
+        (see CostModelService.truncations) so drops stay observable."""
         unk = self.token_to_id[UNK]
         ids = [self.token_to_id.get(t, unk) for t in tokens[:max_len]]
         out = np.full((max_len,), self.token_to_id[PAD], np.int32)
         out[:len(ids)] = ids
+        return out
+
+    def _frozen_table(self):
+        """Sorted numpy token table for vectorized lookup, built lazily
+        and rebuilt if the vocab dict grew (it never does in practice —
+        vocabs are frozen after fit)."""
+        tab = getattr(self, "_tab", None)
+        if tab is None or tab[2] != len(self.token_to_id):
+            toks = np.array(list(self.token_to_id.keys()))
+            ids = np.fromiter(self.token_to_id.values(), np.int32,
+                              len(self.token_to_id))
+            order = np.argsort(toks)
+            tab = (toks[order], ids[order], len(self.token_to_id))
+            self._tab = tab
+        return tab[0], tab[1]
+
+    def encode_many(self, token_seqs: Sequence[Sequence[str]],
+                    max_len: int) -> np.ndarray:
+        """Vectorized batch encode -> (len(token_seqs), max_len) int32.
+
+        One ``np.searchsorted`` over the frozen sorted token table
+        replaces per-token ``dict.get`` calls; row-identical to
+        :meth:`encode` (same truncation, PAD, and <unk> behavior)."""
+        pad, unk = self.token_to_id[PAD], self.token_to_id[UNK]
+        out = np.full((len(token_seqs), max_len), pad, np.int32)
+        if not token_seqs:
+            return out
+        lens = np.fromiter((min(len(s), max_len) for s in token_seqs),
+                           np.int64, len(token_seqs))
+        flat = [t for s in token_seqs for t in s[:max_len]]
+        if not flat:
+            return out
+        toks, ids_sorted = self._frozen_table()
+        arr = np.asarray(flat)
+        idx = np.minimum(np.searchsorted(toks, arr), len(toks) - 1)
+        found = toks[idx] == arr
+        vals = np.where(found, ids_sorted[idx], unk).astype(np.int32)
+        rows = np.repeat(np.arange(len(token_seqs)), lens)
+        cols = np.arange(int(lens.sum())) - np.repeat(
+            np.cumsum(lens) - lens, lens)
+        out[rows, cols] = vals
         return out
 
     def oov_rate(self, tokens: Sequence[str]) -> float:

@@ -258,9 +258,21 @@ def build_dataset(n_graphs: int = 2000, *, mode: str = "ops",
         vocab=vocab, mode=mode, max_seq=max_seq, texts=texts, seq_lens=lens)
 
     if layout == "dense":
+        # encode in bounded chunks through the vectorized encode_many
+        # (one frozen-table lookup per chunk instead of a dict.get per
+        # token) — the working set stays CHUNK sequences, not the corpus
+        CHUNK = 512
         ids = np.zeros((len(lens), max_seq), np.int32)   # PAD id is 0
+        buf: List[List[str]] = []
+        row0 = 0
         for row, g in enumerate(sample_graph_stream(n_graphs, **stream)):
-            ids[row] = vocab.encode(TOK.graph_tokens(g, mode), max_seq)
+            buf.append(TOK.graph_tokens(g, mode))
+            if len(buf) == CHUNK:
+                ids[row0:row0 + len(buf)] = vocab.encode_many(buf, max_seq)
+                row0 += len(buf)
+                buf = []
+        if buf:
+            ids[row0:row0 + len(buf)] = vocab.encode_many(buf, max_seq)
         return CostDataset(ids=ids, **common)
 
     row_buckets = bucket_lengths(lens, default_buckets(max_seq))
@@ -287,7 +299,7 @@ def build_text_dataset(rows, *, max_seq: int = 1024,
     from repro.core import tokenizer as TOK
     token_seqs = [TOK.tokenize_text(text) for text, _ in rows]
     vocab = TOK.fit_vocab(token_seqs, max_size=vocab_size)
-    ids = np.stack([vocab.encode(t, max_seq) for t in token_seqs])
+    ids = vocab.encode_many(token_seqs, max_seq)
     keys = rows[0][1].keys()
     targets = {k: np.asarray([t[k] for _, t in rows], np.float32)
                for k in keys}

@@ -62,6 +62,10 @@ def main():
                          "the async micro-batching server")
     ap.add_argument("--flush-us", type=float, default=1000.0)
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--dtype", choices=("f32", "bf16"), default="f32",
+                    help="serving precision for candidate costing: bf16 "
+                         "runs quantized forward passes (params cast "
+                         "once; denormalize stays float32-exact)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,7 +93,8 @@ def main():
               f"mape={m['mape_pct']:.1f}%")
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
-                           res.norm_stats, mode="ops", max_seq=160)
+                           res.norm_stats, mode="ops", max_seq=160,
+                           dtype=args.dtype)
     rng = np.random.default_rng(args.seed + 1)
     fams = [f for f in args.families.split(",") if f]
     graphs = [samplers.sample_graph(rng, fams[i % len(fams)])

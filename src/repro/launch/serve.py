@@ -91,6 +91,11 @@ def main():
                     help="synthetic training-set size")
     ap.add_argument("--cache-size", type=int, default=4096,
                     help="LRU prediction-cache bound (unique graphs)")
+    ap.add_argument("--dtype", choices=("f32", "bf16"), default="f32",
+                    help="serving precision: bf16 casts the baked params "
+                         "once and runs quantized forward passes (the "
+                         "denormalize path stays float32-exact; drift vs "
+                         "f32 is gated in tests at Spearman >= 0.99)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -111,7 +116,7 @@ def main():
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160,
-                           cache_size=args.cache_size)
+                           cache_size=args.cache_size, dtype=args.dtype)
     server = CostModelServer(svc, max_batch=args.max_batch,
                              flush_us=args.flush_us,
                              max_queue=args.max_queue)

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.ir.graph import ELEMENTWISE, FUSED_OP, Graph, Tensor
+from repro.ir.graph import ELEMENTWISE, FUSED_OP, Graph, Op, Tensor
 
 
 class Site:
@@ -75,6 +75,77 @@ def _clone_args(g: Graph, name: str) -> Tuple[Graph, Dict[int, int]]:
     new.values = list(g.values[:g.n_args])
     new.n_args = g.n_args
     return new, {i: i for i in range(g.n_args)}
+
+
+class _Derive:
+    """Build a graph derived from a parent while tracking which new ops
+    are *verbatim copies* of parent ops (same opcode/attrs/result type,
+    operands remapped onto values that are themselves verbatim copies).
+
+    On :meth:`finish` the copy map is handed to ``Graph.adopt_hashes``,
+    so the child's ``struct_key()`` inherits the parent's per-value
+    hashes and re-hashes only the rewrite's dirty cone — the incremental
+    hot path a beam search over candidates lives on. The same map feeds
+    the serving layer's parent-delta tokenization (unchanged op token
+    spans are sliced from the parent's cached ids, not re-lexed)."""
+
+    __slots__ = ("parent", "new", "id_map", "copied", "tok_copied")
+
+    def __init__(self, g: Graph, name: Optional[str] = None):
+        self.parent = g
+        self.new, self.id_map = _clone_args(
+            g, g.name if name is None else name)
+        # child value id -> parent value id with identical structural hash
+        self.copied: Dict[int, int] = {i: i for i in range(g.n_args)}
+        # child value id -> parent value id with identical ops-mode token
+        # pair (opcode + result shape): a superset of ``copied`` — ops
+        # downstream of a rewrite re-hash but still tokenize identically
+        self.tok_copied: Dict[int, int] = dict(self.copied)
+
+    def copy(self, op, remap: bool = True) -> int:
+        """Emit a verbatim copy of a parent op. ``remap=False`` leaves
+        ``id_map`` alone (recompute's private duplicate clones).
+
+        This is the single hottest loop of the whole search (it runs
+        once per surviving op per candidate), so it bypasses
+        ``Graph.add_op`` — no operand re-copy, no kwargs splat — and
+        SHARES the parent op's attrs dict: ops are immutable once built
+        (the ``struct_key`` contract), so aliasing is safe."""
+        id_map, new, copied = self.id_map, self.new, self.copied
+        new.values.append(self.parent.values[op.result])
+        nid = len(new.values) - 1
+        # hash-clean only if every operand is itself a clean copy of the
+        # SAME parent value — otherwise the op re-hashes (conservative)
+        clean = True
+        operands = []
+        for o in op.operands:
+            m = id_map[o]
+            operands.append(m)
+            if clean and copied.get(m) != o:
+                clean = False
+        new.ops.append(Op(op.opcode, operands, nid, op.attrs))
+        if clean:
+            copied[nid] = op.result
+        self.tok_copied[nid] = op.result
+        if remap:
+            id_map[op.result] = nid
+        return nid
+
+    def emit(self, opcode: str, operands, out, **attrs) -> int:
+        """Emit a fresh (rewritten) op; its hash is always recomputed."""
+        return self.new.add_op(opcode, operands, out, **attrs)
+
+    def alias(self, parent_vid: int, child_vid: int) -> None:
+        """Map a parent value onto an existing child value (CSE dedup)."""
+        self.id_map[parent_vid] = child_vid
+
+    def finish(self, *, preserve_outputs: bool = True,
+               oracle_check=None) -> Graph:
+        self.new.outputs = [self.id_map[o] for o in self.parent.outputs]
+        self.new.adopt_hashes(self.parent, self.copied, self.tok_copied)
+        return check_legal(self.parent, self.new,
+                           preserve_outputs=preserve_outputs,
+                           oracle_check=oracle_check)
 
 
 def check_legal(old: Graph, new: Graph, *, preserve_outputs: bool = True,
@@ -179,8 +250,8 @@ class FuseElementwise(Rewrite):
 def _fuse(g: Graph, chains: List[List[int]]) -> Graph:
     members = {i for ch in chains for i in ch}
     last = {ch[-1]: ch for ch in chains}
-    new, id_map = _clone_args(g, g.name if g.name.endswith("_fused")
-                              else g.name + "_fused")
+    b = _Derive(g, g.name if g.name.endswith("_fused")
+                else g.name + "_fused")
     for i, op in enumerate(g.ops):
         if i in members and i not in last:
             continue
@@ -188,16 +259,14 @@ def _fuse(g: Graph, chains: List[List[int]]) -> Graph:
             ch = last[i]
             head = g.ops[ch[0]]
             parts = [p for j in ch for p in _chain_parts(g.ops[j])]
-            nid = new.add_op(FUSED_OP,
-                             [id_map[o] for o in head.operands],
-                             g.values[op.result],
-                             n_fused=len(parts), chain="|".join(parts))
+            nid = b.emit(FUSED_OP,
+                         [b.id_map[o] for o in head.operands],
+                         g.values[op.result],
+                         n_fused=len(parts), chain="|".join(parts))
+            b.id_map[op.result] = nid
         else:
-            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
-                             g.values[op.result], **op.attrs)
-        id_map[op.result] = nid
-    new.outputs = [id_map[o] for o in g.outputs]
-    return check_legal(g, new)
+            b.copy(op)
+    return b.finish()
 
 
 def fuse_elementwise(g: Graph) -> Graph:
@@ -245,16 +314,13 @@ class CommonSubexpression(Rewrite):
         dup, canon = site.detail
         assert _op_signature(g, g.ops[dup]) == \
             _op_signature(g, g.ops[canon]), "stale CSE site"
-        new, id_map = _clone_args(g, g.name)
+        b = _Derive(g)
         for i, op in enumerate(g.ops):
             if i == dup:
-                id_map[op.result] = id_map[g.ops[canon].result]
+                b.alias(op.result, b.id_map[g.ops[canon].result])
                 continue
-            id_map[op.result] = new.add_op(
-                op.opcode, [id_map[o] for o in op.operands],
-                g.values[op.result], **op.attrs)
-        new.outputs = [id_map[o] for o in g.outputs]
-        return check_legal(g, new)
+            b.copy(op)
+        return b.finish()
 
 
 # --------------------------------------------------------------------- DCE
@@ -271,15 +337,12 @@ class DeadOpElimination(Rewrite):
 
     def apply(self, g: Graph, site: Site) -> Graph:
         (dead,) = site.detail
-        new, id_map = _clone_args(g, g.name)
+        b = _Derive(g)
         for i, op in enumerate(g.ops):
             if i == dead:
                 continue
-            id_map[op.result] = new.add_op(
-                op.opcode, [id_map[o] for o in op.operands],
-                g.values[op.result], **op.attrs)
-        new.outputs = [id_map[o] for o in g.outputs]
-        return check_legal(g, new)
+            b.copy(op)
+        return b.finish()
 
 
 # --------------------------------------------------- recompute vs materialize
@@ -294,15 +357,16 @@ class RecomputeCheapProducer(Rewrite):
     name = "recompute"
 
     def applicable(self, g: Graph) -> List[Site]:
-        sites = []
-        for i, op in enumerate(g.ops):
-            if not (_fusable(op)):
-                continue
-            consumers = [j for j, c in enumerate(g.ops)
-                         if op.result in c.operands]
-            if len(consumers) >= 2:
-                sites.append(Site(self.name, (i,)))
-        return sites
+        # one pass over operand slots (distinct consumer OPS per value),
+        # not a per-op rescan of the whole op list — applicable() runs
+        # for every frontier parent on every expansion, so the old
+        # O(n_ops^2) walk was a measurable share of search wall time
+        consumers: Dict[int, set] = {}
+        for j, c in enumerate(g.ops):
+            for o in c.operands:
+                consumers.setdefault(o, set()).add(j)
+        return [Site(self.name, (i,)) for i, op in enumerate(g.ops)
+                if _fusable(op) and len(consumers.get(op.result, ())) >= 2]
 
     def apply(self, g: Graph, site: Site) -> Graph:
         (pi,) = site.detail
@@ -310,19 +374,20 @@ class RecomputeCheapProducer(Rewrite):
         consumers = [j for j, c in enumerate(g.ops)
                      if prod.result in c.operands]
         assert len(consumers) >= 2, "stale recompute site"
-        new, id_map = _clone_args(g, g.name)
+        b = _Derive(g)
+        dup_consumers = set(consumers[1:])
         for i, op in enumerate(g.ops):
-            operands = [id_map[o] for o in op.operands]
-            if i in consumers[1:]:
-                clone = new.add_op(prod.opcode,
-                                   [id_map[o] for o in prod.operands],
-                                   g.values[prod.result], **prod.attrs)
-                operands = [clone if o == prod.result else id_map[o]
+            if i in dup_consumers:
+                # the private clone is itself a verbatim copy of the
+                # producer (hash-identical); the consumer re-hashes
+                clone = b.copy(prod, remap=False)
+                operands = [clone if o == prod.result else b.id_map[o]
                             for o in op.operands]
-            id_map[op.result] = new.add_op(
-                op.opcode, operands, g.values[op.result], **op.attrs)
-        new.outputs = [id_map[o] for o in g.outputs]
-        return check_legal(g, new)
+                b.id_map[op.result] = b.emit(
+                    op.opcode, operands, g.values[op.result], **op.attrs)
+            else:
+                b.copy(op)
+        return b.finish()
 
 
 # ---------------------------------------------------------- dtype narrowing
@@ -346,34 +411,45 @@ class DtypeNarrow(Rewrite):
 
     def apply(self, g: Graph, site: Site) -> Graph:
         outs = set(g.outputs)
-        new, id_map = _clone_args(g, g.name)
+        b = _Derive(g)
         for op in g.ops:
             t = g.values[op.result]
             if op.result not in outs and t.dtype == "f32":
-                t = Tensor(t.shape, "bf16")
-            id_map[op.result] = new.add_op(
-                op.opcode, [id_map[o] for o in op.operands], t, **op.attrs)
-        new.outputs = [id_map[o] for o in g.outputs]
-        return check_legal(g, new)
+                b.id_map[op.result] = b.emit(
+                    op.opcode, [b.id_map[o] for o in op.operands],
+                    Tensor(t.shape, "bf16"), **op.attrs)
+            else:
+                b.copy(op)
+        return b.finish()
 
 
 # ------------------------------------------------------------------ unroll
 def unroll_graph(g: Graph, factor: int) -> Graph:
     """Model loop unrolling of the graph body: replicate ops with renamed
     SSA ids (shared args), as an unrolled inner loop would look to the
-    cost model."""
+    cost model. Every replica op is a verbatim copy of its original, so
+    the unrolled graph's struct_key inherits all per-value hashes and
+    re-hashes nothing."""
     new = Graph(name=f"{g.name}_u{factor}")
     new.values = list(g.values[:g.n_args])
     new.n_args = g.n_args
+    copied = {i: i for i in range(g.n_args)}
     outs = []
     for _ in range(factor):
         id_map = {i: i for i in range(g.n_args)}
         for op in g.ops:
-            nid = new.add_op(op.opcode, [id_map[o] for o in op.operands],
-                             g.values[op.result], **op.attrs)
+            # fast verbatim copy (see _Derive.copy): attrs dict shared,
+            # no add_op overhead — every replica op is a clean copy
+            new.values.append(g.values[op.result])
+            nid = len(new.values) - 1
+            new.ops.append(Op(op.opcode,
+                              [id_map[o] for o in op.operands], nid,
+                              op.attrs))
             id_map[op.result] = nid
+            copied[nid] = op.result
         outs.extend(id_map[o] for o in g.outputs)
     new.outputs = outs
+    new.adopt_hashes(g, copied)
     new.validate()
     return new
 

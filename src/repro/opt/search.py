@@ -128,17 +128,38 @@ class SearchResult:
         return " -> ".join(repr(s) for _, s in self.best_seq)
 
 
-def _round_robin(per_parent: List[List], cap: int) -> List:
-    """Interleave candidate lists fairly across parents, capped."""
-    out = []
+def _expand_lazy(frontier: List["_State"], rules, visited: set,
+                 cap: int) -> List[Tuple]:
+    """Round-robin over every parent's rewrite sites, constructing a
+    candidate graph (rule.apply + struct_key) only when the cursor
+    actually reaches its site under ``cap``.
+
+    The eager version applied and hashed EVERY site's graph just to
+    throw most away at the cap — at fleet scale that construction was
+    the largest single share of search wall time. Illegal sites and
+    already-visited keys don't consume cap slots (same contract as
+    before: only candidates actually costed become visited)."""
+    per_parent = [[(st, r, s) for r in rules
+                   for s in r.applicable(st.graph)] for st in frontier]
+    batch: List[Tuple] = []
+    proposed = set()                     # this expansion's intra-dedup
     rank = 0
-    while len(out) < cap:
-        row = [lst[rank] for lst in per_parent if rank < len(lst)]
-        if not row:
-            break
-        out.extend(row[:cap - len(out)])
+    while len(batch) < cap and any(rank < len(p) for p in per_parent):
+        for lst in per_parent:
+            if rank >= len(lst) or len(batch) >= cap:
+                continue
+            st, rule, site = lst[rank]
+            try:
+                ng = rule.apply(st.graph, site)
+            except AssertionError:
+                continue                 # illegal here: not a candidate
+            key = ng.struct_key()
+            if key in visited or key in proposed:
+                continue
+            proposed.add(key)
+            batch.append((st, rule.name, site, ng, key))
         rank += 1
-    return out
+    return batch
 
 
 def beam_search(service, g: Graph,
@@ -183,24 +204,9 @@ def beam_search(service, g: Graph,
     if record_candidates:
         res.candidates = [(g, root_row[obj.lat_t])]
     for _ in range(max_steps):
-        per_parent = []
-        proposed = set()                 # this expansion's intra-dedup
-        for st in frontier:
-            cands = []
-            for rule in rules:
-                for site in rule.applicable(st.graph):
-                    try:
-                        ng = rule.apply(st.graph, site)
-                    except AssertionError:
-                        continue         # illegal here: not a candidate
-                    key = ng.struct_key()
-                    if key in visited or key in proposed:
-                        continue
-                    proposed.add(key)
-                    cands.append((st, rule.name, site, ng, key))
-            per_parent.append(cands)
         cap = min(max_candidates, eval_budget - res.evaluated)
-        batch = _round_robin(per_parent, cap) if cap > 0 else []
+        batch = _expand_lazy(frontier, rules, visited, cap) \
+            if cap > 0 else []
         if not batch:
             break
         # only candidates actually costed become visited: states dropped

@@ -92,6 +92,49 @@ def test_hlo_shape_bytes(a, b, c):
     assert total2 == a * 4 + b * c * 2
 
 
+@given(graphs(), st.lists(st.integers(0, 2**31 - 1),
+                          min_size=1, max_size=6))
+@settings(**SETTINGS)
+def test_incremental_struct_key_matches_from_scratch(g, seeds):
+    """Incremental hashing invariant: after ANY legal rewrite sequence
+    (random rule + site per step, across all registered families —
+    fusion, CSE, DCE, recompute, dtype_narrow, unroll), the child's
+    memoized/inherited struct_key equals the from-scratch Merkle walk,
+    and a bare structural clone (no memos at all) agrees."""
+    from repro.ir.graph import Graph
+    from repro.opt import rewrites as RW
+    rules = RW.default_rules()
+    out = g
+    for s in seeds:
+        rng = np.random.default_rng(s)
+        firing = [(r, site) for r in rules for site in r.applicable(out)]
+        if not firing:
+            break
+        r, site = firing[int(rng.integers(0, len(firing)))]
+        try:
+            out = r.apply(out, site)
+        except AssertionError:
+            continue                      # illegal here: try next step
+        assert out.struct_key() == out.struct_key_fresh()
+    clone = Graph(values=list(out.values), n_args=out.n_args,
+                  ops=list(out.ops), outputs=list(out.outputs))
+    assert clone.struct_key() == out.struct_key()
+
+
+@given(graphs(), st.integers(4, 64))
+@settings(**SETTINGS)
+def test_encode_many_matches_encode(g, max_len):
+    """Vectorized batch encode is row-identical to per-sequence encode,
+    including truncation, PAD fill, and <unk> for OOV tokens."""
+    toks = TOK.graph_tokens(g, "ops")
+    v = TOK.fit_vocab([toks[: max(len(toks) // 2, 1)]], max_size=4096)
+    seqs = [toks, toks[:3], ["never-seen"] * 5, []]
+    batch = v.encode_many(seqs, max_len)
+    assert batch.shape == (len(seqs), max_len)
+    for row, s in zip(batch, seqs):
+        np.testing.assert_array_equal(row, v.encode(s, max_len))
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_fusion_advisor_cost_ordering(seed):
