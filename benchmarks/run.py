@@ -401,7 +401,11 @@ def serve_concurrent(full: bool = False, seed: int = 0):
                "batch_occupancy": m["batch_occupancy"],
                "full_flushes": m["full_flushes"],
                "deadline_flushes": m["deadline_flushes"],
-               "stagnant_flushes": m["stagnant_flushes"]}
+               "stagnant_flushes": m["stagnant_flushes"],
+               # service phase split (hash/encode/forward seconds) as
+               # exported by ServerMetrics.snapshot via phase_source
+               **{k: v for k, v in m.items()
+                  if k.startswith("phase_")}}
         out["levels"][str(conc)] = lvl
         _row(f"serve_concurrent/serialized_c{conc}",
              base_dt / n_req * 1e6, f"req_s={base_req_s:.0f}")
@@ -417,6 +421,89 @@ def serve_concurrent(full: bool = False, seed: int = 0):
 
 
 # -------------------------------------------------------------- search_fleet
+def _unoptimized_ir(g, rng):
+    """Dress a sampled graph up as the *unoptimized* IR a compiler
+    hands the optimizer: naive elementwise chains (fusion fodder),
+    duplicated subexpressions (CSE fodder), and dead ops (DCE
+    fodder), so every search has a rich rewrite frontier instead of
+    the handful of sites already-clean graphs expose."""
+    from repro.ir import graph as IRG
+    from repro.ir.graph import ELEMENTWISE, Tensor
+    ew = sorted(ELEMENTWISE)
+    new = IRG.Graph(name=g.name + "_raw")
+    new.values = list(g.values[:g.n_args])
+    new.n_args = g.n_args
+    for op in g.ops:
+        new.add_op(op.opcode, list(op.operands),
+                   g.values[op.result], **op.attrs)
+    new.outputs = list(g.outputs)
+    results = [op.result for op in new.ops]
+    for _ in range(6):               # fusable chains ending in outputs
+        v = results[int(rng.integers(0, len(results)))]
+        for _ in range(int(rng.integers(3, 7))):
+            t = new.values[v]
+            v = new.add_op(ew[int(rng.integers(0, len(ew)))], [v],
+                           Tensor(t.shape, t.dtype))
+        new.outputs.append(v)
+    for _ in range(4):               # duplicate subexpressions (CSE)
+        op = new.ops[int(rng.integers(0, len(new.ops)))]
+        d = new.add_op(op.opcode, list(op.operands),
+                       new.values[op.result], **op.attrs)
+        t = new.values[d]
+        new.outputs.append(
+            new.add_op("relu", [d], Tensor(t.shape, t.dtype)))
+    for _ in range(3):               # dead ops (DCE)
+        v = results[int(rng.integers(0, len(results)))]
+        t = new.values[v]
+        new.add_op("exp", [v], Tensor(t.shape, t.dtype))
+    new.validate()
+    return new
+
+
+def _fleet_fixture(full: bool, seed: int):
+    """Shared pool / vocab / params / knobs for the fleet benches
+    (search_fleet and search_fleet_replicated run identical work)."""
+    from repro.core import tokenizer as TOK
+    from repro.core.service import CostModelService
+    from repro.ir import samplers
+    from repro.opt import rewrites as RW
+
+    n_workers = 12 if full else 8
+    n_pool = 10 if full else 5
+    beam, steps, budget = (4, 4, 128) if full else (4, 3, 64)
+    max_batch = 32
+    cfg = CostModelConfig(name="fleet", vocab_size=4096, max_seq=256,
+                          embed_dim=48, conv_filters=(2,) * 4,
+                          conv_channels=(48,) * 4, fc_dims=(128, 48))
+    rng = np.random.default_rng(seed)
+    fams = sorted(samplers.SAMPLERS)
+    pool = [_unoptimized_ir(
+        samplers.sample_graph(rng, fams[i % len(fams)]), rng)
+        for i in range(n_pool)]
+    # vocab over the pool + rewritten variants, so fused/bf16 candidate
+    # text is in-vocabulary (as a rewrite_factor training corpus would be)
+    vocab_seqs = [TOK.graph_tokens(g, "ops") for g in pool]
+    vocab_seqs += [TOK.graph_tokens(RW.random_rewrite(g, rng), "ops")
+                   for g in pool for _ in range(3)]
+    vocab = TOK.fit_vocab(vocab_seqs, max_size=4096)
+    heads = CM.DEFAULT_HEADS
+    params = CM.conv_init(jax.random.PRNGKey(seed), cfg, heads=heads)
+    stats = {t: {"mu": 0.0, "sigma": 1.0} for t in heads}
+
+    def make_service(**kw):
+        return CostModelService("conv1d", cfg, params, vocab, stats,
+                                mode="ops", max_seq=256,
+                                max_batch=max_batch,
+                                buckets=(64, 128, 256),
+                                batch_ladder=(1, 2, 4, 8, 16, 32), **kw)
+
+    return {"n_workers": n_workers, "n_pool": n_pool, "beam": beam,
+            "steps": steps, "budget": budget, "max_batch": max_batch,
+            "cfg": cfg, "pool": pool, "vocab": vocab, "heads": heads,
+            "params": params, "stats": stats,
+            "make_service": make_service}
+
+
 def search_fleet(full: bool = False, seed: int = 0):
     """Fleet-scale concurrent search: N beam_search workers drive ONE
     async micro-batching CostModelServer gateway.
@@ -442,78 +529,16 @@ def search_fleet(full: bool = False, seed: int = 0):
     forward wall-clock split, and bf16-vs-f32 serving drift (gate:
     Spearman >= 0.99 per target on the candidate corpus). Weights are
     untrained — throughput and drift ranking do not depend on them."""
-    from repro.core import tokenizer as TOK
     from repro.core.server import CostModelServer
-    from repro.core.service import CostModelService
     from repro.ir import graph as IRG
-    from repro.ir import samplers
     from repro.opt import rewrites as RW
     from repro.opt import search as OS
 
-    n_workers = 12 if full else 8
-    n_pool = 10 if full else 5
-    beam, steps, budget = (4, 4, 128) if full else (4, 3, 64)
-    max_batch = 32
-
-    def _unoptimized(g, rng):
-        """Dress a sampled graph up as the *unoptimized* IR a compiler
-        hands the optimizer: naive elementwise chains (fusion fodder),
-        duplicated subexpressions (CSE fodder), and dead ops (DCE
-        fodder), so every search has a rich rewrite frontier instead of
-        the handful of sites already-clean graphs expose."""
-        from repro.ir.graph import ELEMENTWISE, Tensor
-        ew = sorted(ELEMENTWISE)
-        new = IRG.Graph(name=g.name + "_raw")
-        new.values = list(g.values[:g.n_args])
-        new.n_args = g.n_args
-        for op in g.ops:
-            new.add_op(op.opcode, list(op.operands),
-                       g.values[op.result], **op.attrs)
-        new.outputs = list(g.outputs)
-        results = [op.result for op in new.ops]
-        for _ in range(6):               # fusable chains ending in outputs
-            v = results[int(rng.integers(0, len(results)))]
-            for _ in range(int(rng.integers(3, 7))):
-                t = new.values[v]
-                v = new.add_op(ew[int(rng.integers(0, len(ew)))], [v],
-                               Tensor(t.shape, t.dtype))
-            new.outputs.append(v)
-        for _ in range(4):               # duplicate subexpressions (CSE)
-            op = new.ops[int(rng.integers(0, len(new.ops)))]
-            d = new.add_op(op.opcode, list(op.operands),
-                           new.values[op.result], **op.attrs)
-            t = new.values[d]
-            new.outputs.append(
-                new.add_op("relu", [d], Tensor(t.shape, t.dtype)))
-        for _ in range(3):               # dead ops (DCE)
-            v = results[int(rng.integers(0, len(results)))]
-            t = new.values[v]
-            new.add_op("exp", [v], Tensor(t.shape, t.dtype))
-        new.validate()
-        return new
-    cfg = CostModelConfig(name="fleet", vocab_size=4096, max_seq=256,
-                          embed_dim=48, conv_filters=(2,) * 4,
-                          conv_channels=(48,) * 4, fc_dims=(128, 48))
-    rng = np.random.default_rng(seed)
-    fams = sorted(samplers.SAMPLERS)
-    pool = [_unoptimized(samplers.sample_graph(rng, fams[i % len(fams)]),
-                         rng) for i in range(n_pool)]
-    # vocab over the pool + rewritten variants, so fused/bf16 candidate
-    # text is in-vocabulary (as a rewrite_factor training corpus would be)
-    vocab_seqs = [TOK.graph_tokens(g, "ops") for g in pool]
-    vocab_seqs += [TOK.graph_tokens(RW.random_rewrite(g, rng), "ops")
-                   for g in pool for _ in range(3)]
-    vocab = TOK.fit_vocab(vocab_seqs, max_size=4096)
-    heads = CM.DEFAULT_HEADS
-    params = CM.conv_init(jax.random.PRNGKey(seed), cfg, heads=heads)
-    stats = {t: {"mu": 0.0, "sigma": 1.0} for t in heads}
-
-    def make_service(**kw):
-        return CostModelService("conv1d", cfg, params, vocab, stats,
-                                mode="ops", max_seq=256,
-                                max_batch=max_batch,
-                                buckets=(64, 128, 256),
-                                batch_ladder=(1, 2, 4, 8, 16, 32), **kw)
+    fx = _fleet_fixture(full, seed)
+    n_workers, n_pool = fx["n_workers"], fx["n_pool"]
+    beam, steps, budget = fx["beam"], fx["steps"], fx["budget"]
+    max_batch, pool, heads = fx["max_batch"], fx["pool"], fx["heads"]
+    make_service = fx["make_service"]
 
     def run_fleet(svc):
         """Drive the full fleet once; returns (wall_s, candidates, mode
@@ -649,7 +674,11 @@ def search_fleet(full: bool = False, seed: int = 0):
                           "cache_hit_rate": m["cache_hit_rate"],
                           "coalesced": m["coalesced"],
                           "batches": m["batches"],
-                          "batch_occupancy": m["batch_occupancy"]}}
+                          "batch_occupancy": m["batch_occupancy"],
+                          # service phase split as exported by
+                          # ServerMetrics.snapshot (phase_source)
+                          **{k: v for k, v in m.items()
+                             if k.startswith("phase_")}}}
         out["modes"][mode] = rec
         _row(f"search_fleet/{mode}_cold", dt_c / cands_c * 1e6,
              f"cands_s={cands_c / dt_c:.0f};workers={n_workers}"
@@ -701,6 +730,189 @@ def search_fleet(full: bool = False, seed: int = 0):
          f"spearman_min={drift['spearman_min']:.4f}"
          f";max_rel_err={drift['max_rel_err_all']:.4f}"
          f";corpus={len(corpus)}")
+    return out
+
+
+# --------------------------------------------------- search_fleet_replicated
+def search_fleet_replicated(full: bool = False, seed: int = 0,
+                            replicas: int = 4):
+    """Replicated serving tier vs the thread fleet, on identical work.
+
+    * ``baseline`` — today's pre-replication worst case: N *thread*
+      workers convoying on the GIL through one in-process gateway, with
+      incremental hashing and fast_encode both off (every candidate
+      re-hashed and re-encoded from scratch).
+    * ``replicated`` — N *process* workers, each a persistent
+      :class:`~repro.serving.router.ReplicaClient` (GIL-free search +
+      featurization + local LRU), routing misses by struct key across
+      ``replicas`` spawned model replicas with adaptive flush deadlines
+      and a shared cross-replica cache behind them.
+
+    Both run the same pool / rotation / search parameters: a warm
+    (untimed) pass, a cache-cold timed pass, then best-of-3 steady
+    passes (each steady pass repeats the pool 3x inside one timed
+    window, so the per-pass barrier does not pollute the short
+    steady measurement). gate.py enforces replicated steady >= 3x
+    baseline steady
+    locally (>= 2x on shared CI runners) at replicas >= 4. Also reports
+    per-replica LRU hit rates (struct-key routing should keep each
+    replica's working set disjoint and hot), router health, shared-tier
+    hits, and the adaptive effective-flush gauge."""
+    from repro.core.server import CostModelServer
+    from repro.ir import graph as IRG
+    from repro.opt import search as OS
+    from repro.serving import FleetDriver, ServiceSpec, start_replicas
+
+    fx = _fleet_fixture(full, seed)
+    n_workers, pool = fx["n_workers"], fx["pool"]
+    search_kw = {"beam_width": fx["beam"], "max_steps": fx["steps"],
+                 "eval_budget": fx["budget"]}
+    max_batch = fx["max_batch"]
+    out = {"n_workers": n_workers, "n_pool": fx["n_pool"],
+           "replicas": replicas, "modes": {}, **search_kw}
+
+    # ---- baseline: thread fleet, from-scratch featurization ----------
+    svc = fx["make_service"](fast_encode=False)
+    svc.warmup()
+
+    def _thread_pass(rounds=1):
+        prev = IRG.set_incremental_hashing(False)
+        try:
+            server = CostModelServer(svc, max_batch=max_batch,
+                                     flush_us=150)
+            server.start(warmup=False)
+            results, errs = [], []
+
+            def worker(w):
+                try:
+                    for _ in range(rounds):
+                        results.extend(OS.search_pool(
+                            server, pool, offset=w, **search_kw))
+                except Exception as e:
+                    errs.append(e)
+
+            threads = [threading.Thread(target=worker, args=(w,))
+                       for w in range(n_workers)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            dt = time.perf_counter() - t0
+            server.stop()
+            if errs:
+                raise errs[0]
+            return dt, sum(r.evaluated + 1 for r in results)
+        finally:
+            IRG.set_incremental_hashing(prev)
+
+    def _clear_base():
+        with svc._cache_lock:
+            svc._cache.clear()
+            svc._ids_cache.clear()
+
+    # steady passes repeat the pool STEADY_ROUNDS times inside one
+    # timed pass (both modes): the measurement window grows ~3x while
+    # the per-pass setup/barrier cost is paid once, which keeps
+    # scheduler noise on a busy host out of the gated ratio
+    STEADY_ROUNDS = 3
+    _thread_pass()                     # python-warm, untimed
+    _clear_base()
+    base_cold = _thread_pass()
+    base_steady = base_cold
+    for _ in range(3):
+        d, c = _thread_pass(rounds=STEADY_ROUNDS)
+        if c / d > base_steady[1] / base_steady[0]:
+            base_steady = (d, c)
+
+    # ---- replicated: process fleet behind the router -----------------
+    spec = ServiceSpec.from_service(fx["make_service"](fast_encode=True))
+    tier = start_replicas(spec, replicas, n_clients=n_workers,
+                          max_batch=max_batch, flush_us=150.0,
+                          adaptive_flush=True)
+    try:
+        driver = FleetDriver.start(tier, pool, n_workers,
+                                   search_kw=search_kw)
+        try:
+            driver.run_pass()          # warm, untimed
+            driver.clear()
+            tier.shared_cache.clear()
+            rep_cold = driver.run_pass()
+            rep_steady = rep_cold
+            for _ in range(3):
+                p = driver.run_pass(rounds=STEADY_ROUNDS)
+                if p["candidates"] / p["wall_s"] > \
+                        rep_steady["candidates"] / rep_steady["wall_s"]:
+                    rep_steady = p
+            stats = driver.stats(include_replicas=True)
+        finally:
+            driver.stop()
+    finally:
+        tier.stop()
+
+    def _cps(dt, cands):
+        return cands / dt
+
+    out["modes"]["baseline"] = {
+        "cold": {"wall_s": base_cold[0], "candidates": base_cold[1],
+                 "candidates_per_s": _cps(*base_cold)},
+        "steady": {"wall_s": base_steady[0], "candidates": base_steady[1],
+                   "candidates_per_s": _cps(*base_steady)}}
+    rep_rec = {
+        "cold": {"wall_s": rep_cold["wall_s"],
+                 "candidates": rep_cold["candidates"],
+                 "candidates_per_s": rep_cold["candidates"]
+                 / rep_cold["wall_s"]},
+        "steady": {"wall_s": rep_steady["wall_s"],
+                   "candidates": rep_steady["candidates"],
+                   "candidates_per_s": rep_steady["candidates"]
+                   / rep_steady["wall_s"]}}
+    replica_stats = (stats[0] or {}).get("replicas") or []
+    per_replica = []
+    for payload in replica_stats:
+        if not payload:
+            continue
+        s, c = payload["server"], payload["cache"]
+        per_replica.append({
+            "replica_id": payload["replica_id"],
+            "requests": s["requests"],
+            "batches": s["batches"],
+            "batch_occupancy": s["batch_occupancy"],
+            "lru_hit_rate": c["hit_rate"],
+            "lru_size": c["size"],
+            "flush_us_effective": s.get("flush_us_effective"),
+            "shared_hits": payload["shared_hits"],
+            "shared_misses": payload["shared_misses"],
+            **{k: v for k, v in s.items() if k.startswith("phase_")}})
+    rep_rec["per_replica"] = per_replica
+    rep_rec["router"] = {
+        "shed_total": sum(w["shed_count"] for w in stats if w),
+        "health": [w["health"] for w in stats if w],
+        "local_hit_rates": [w["local_cache"]["hit_rate"]
+                            for w in stats if w]}
+    rep_rec["shared_cache_fill"] = tier.shared_cache.fill()
+    out["modes"]["replicated"] = rep_rec
+
+    steady_ratio = (rep_rec["steady"]["candidates_per_s"]
+                    / out["modes"]["baseline"]["steady"]
+                    ["candidates_per_s"])
+    cold_ratio = (rep_rec["cold"]["candidates_per_s"]
+                  / out["modes"]["baseline"]["cold"]["candidates_per_s"])
+    out["replicated_steady_speedup_vs_baseline"] = steady_ratio
+    out["replicated_cold_speedup_vs_baseline"] = cold_ratio
+    for mode in ("baseline", "replicated"):
+        for ph in ("cold", "steady"):
+            r = out["modes"][mode][ph]
+            _row(f"search_fleet_replicated/{mode}_{ph}",
+                 r["wall_s"] / r["candidates"] * 1e6,
+                 f"cands_s={r['candidates_per_s']:.0f}"
+                 f";workers={n_workers};replicas="
+                 f"{replicas if mode == 'replicated' else 0}")
+    hits = [f"{r['lru_hit_rate']:.0%}" for r in per_replica]
+    _row("search_fleet_replicated/speedup", 0.0,
+         f"steady={steady_ratio:.2f}x;cold={cold_ratio:.2f}x"
+         f";replica_lru_hits={'/'.join(hits)}"
+         f";shed={rep_rec['router']['shed_total']}")
     return out
 
 
@@ -863,6 +1075,7 @@ BENCHES = {
     "serve_concurrent": serve_concurrent,
     "opt_search": opt_search,
     "search_fleet": search_fleet,
+    "search_fleet_replicated": search_fleet_replicated,
     "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,
@@ -884,6 +1097,81 @@ def _jsonable(x):
     return x
 
 
+# --------------------------------------------------------- perf trajectory
+def _git_sha() -> str:
+    try:
+        import subprocess
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+# Per-bench summarizers: the handful of headline scalars a trajectory
+# plot wants, not the whole payload. Benches without one fall through
+# to the generic ratio/speedup scrape.
+_HISTORY_SUMMARY = {
+    "serve_concurrent": lambda r: {
+        f"speedup_c{c}": lvl["speedup_vs_serialized"]
+        for c, lvl in r["levels"].items()},
+    "search_fleet": lambda r: {
+        "per_worker_steady_speedup": r["speedup_vs_baseline"],
+        "fleet_steady_speedup": r["fleet_steady_speedup_vs_baseline"],
+        "cold_speedup": r["cold_speedup_vs_baseline"],
+        "bf16_spearman_min": r["bf16"]["spearman_min"]},
+    "search_fleet_replicated": lambda r: {
+        "replicated_steady_speedup":
+            r["replicated_steady_speedup_vs_baseline"],
+        "replicated_cold_speedup":
+            r["replicated_cold_speedup_vs_baseline"],
+        "replicas": r["replicas"],
+        "shed_total": r["modes"]["replicated"]["router"]["shed_total"]},
+}
+
+
+def _history_summary(name, result) -> dict:
+    fn = _HISTORY_SUMMARY.get(name)
+    if fn is not None:
+        try:
+            return _jsonable(fn(result))
+        except Exception:
+            pass
+    if isinstance(result, dict):       # generic: headline scalars only
+        return {k: _jsonable(v) for k, v in result.items()
+                if isinstance(v, (int, float, np.integer, np.floating))
+                and any(s in k for s in
+                        ("speedup", "ratio", "rmse", "spearman"))}
+    return {}
+
+
+def append_history(path: str, args, summaries: dict) -> None:
+    """Append one rolled-up entry (sha + per-bench headline numbers) to
+    the trajectory file — the cross-PR record BENCH_*.json artifacts
+    never gave us, since each run overwrote the last."""
+    hist = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+            hist.setdefault("entries", [])
+        except Exception:
+            pass                       # corrupt file: restart trajectory
+    hist["entries"].append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "sha": _git_sha(),
+        "full": bool(args.full),
+        "seed": args.seed,
+        "benches": summaries})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=2)
+        f.write("\n")
+    print(f"# appended history entry -> {path} "
+          f"({len(hist['entries'])} total)", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
@@ -892,13 +1180,25 @@ def main() -> None:
     ap.add_argument("--json-dir", default=None,
                     help="write one BENCH_<name>.json record per bench "
                          "run (CI uploads these as workflow artifacts)")
+    ap.add_argument("--replicas", type=int, default=4,
+                    help="replica-process count for "
+                         "search_fleet_replicated")
+    ap.add_argument("--history", default=None,
+                    help="append a rolled-up entry (git sha + headline "
+                         "numbers per bench) to this BENCH_history.json "
+                         "trajectory file after the run")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    summaries = {}
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
-        result = fn(full=args.full, seed=args.seed)
+        kw = {"full": args.full, "seed": args.seed}
+        if name == "search_fleet_replicated":
+            kw["replicas"] = args.replicas
+        result = fn(**kw)
+        summaries[name] = _history_summary(name, result)
         if args.json_dir:
             os.makedirs(args.json_dir, exist_ok=True)
             path = os.path.join(args.json_dir, f"BENCH_{name}.json")
@@ -907,6 +1207,8 @@ def main() -> None:
                            "seed": args.seed,
                            "result": _jsonable(result)}, f, indent=2)
             print(f"# wrote {path}", flush=True)
+    if args.history and summaries:
+        append_history(args.history, args, summaries)
 
 
 if __name__ == '__main__':

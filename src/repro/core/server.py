@@ -53,7 +53,17 @@ from repro.ir.graph import Graph
 
 
 class ServerOverloadedError(RuntimeError):
-    """Load shed: the bounded request queue is full. Back off and retry."""
+    """Load shed: the bounded request queue is full. Back off and retry.
+
+    ``retry_after_s`` is the server's backoff hint: roughly the time it
+    expects to need to drain the current backlog. Clients (the
+    replicated serving tier's router) should sleep at least this long
+    before retrying, and shed the request themselves after a bounded
+    number of attempts."""
+
+    def __init__(self, msg: str, retry_after_s: float = 0.01):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
 
 
 @dataclass
@@ -76,6 +86,13 @@ class ServerMetrics:
 
     def __init__(self, reservoir: int = 8192):
         self._lock = threading.Lock()
+        # optional callable returning the wrapped service's phase_stats()
+        # dict; snapshot() merges it under ``phase_*`` keys so the
+        # hash/encode/forward wall-clock split (and the truncation
+        # counter) travels with every metrics payload the benches emit
+        self.phase_source = None
+        # gauges the server updates out-of-band (adaptive flush deadline)
+        self.gauges: Dict[str, float] = {}
         # submit-side (bumped via note_request under the shared lock)
         self.requests = 0
         self.cache_hits = 0       # resolved at submit, no queue/forward
@@ -113,11 +130,13 @@ class ServerMetrics:
             self.max_queue_depth = queue_depth
 
     def snapshot(self, queue_depth: int = 0) -> Dict[str, float]:
+        phase = self.phase_source() if self.phase_source else None
         with self._lock:
             hits, total = self.cache_hits, self.requests
             lat = np.asarray(self._lat_us, np.float64)
             occ = (self.batched_entries / self.batches
                    if self.batches else 0.0)
+            gauges = dict(self.gauges)
             out = {
                 "requests": total,
                 "cache_hits": hits,
@@ -136,6 +155,10 @@ class ServerMetrics:
         for name, q in [("p50", 50), ("p95", 95), ("p99", 99)]:
             out[f"latency_{name}_us"] = (
                 float(np.percentile(lat, q)) if lat.size else 0.0)
+        out.update(gauges)
+        if phase is not None:
+            for k, v in phase.items():
+                out[f"phase_{k}"] = v
         return out
 
 
@@ -153,11 +176,29 @@ class CostModelServer:
                  flush_us: float = 2000.0,
                  min_batch: Optional[int] = None,
                  max_queue: int = 4096,
-                 metrics_reservoir: int = 8192):
+                 metrics_reservoir: int = 8192,
+                 adaptive_flush: bool = False,
+                 flush_us_min: Optional[float] = None,
+                 adaptive_k: float = 8.0):
         self.service = service
         self.max_batch = min(max_batch or service.max_batch,
                              service.max_batch)
         self.flush_us = float(flush_us)
+        # Adaptive flush deadline: scale the linger with the observed
+        # arrival rate. Lingering only pays while more requests are
+        # actually arriving — a fixed deadline makes slow-arrival (cold)
+        # traffic wait the full budget for batches that never fill. With
+        # adaptive_flush on, the effective deadline is
+        #   clamp(adaptive_k * EWMA(inter-arrival), flush_us_min, flush_us)
+        # and collapses straight to flush_us_min once arrivals are slower
+        # than the budget itself (waiting cannot fill a batch, so flush
+        # now). flush_us stays the upper bound / latency budget.
+        self.adaptive_flush = bool(adaptive_flush)
+        self.flush_us_min = (max(self.flush_us / 16.0, 25.0)
+                             if flush_us_min is None else float(flush_us_min))
+        self.adaptive_k = float(adaptive_k)
+        self._arrival_ewma_us: Optional[float] = None
+        self._last_arrival: Optional[float] = None
         # Below min_batch the worker prefers letting a queue build while
         # another batch computes (throughput knob); the flush deadline
         # and the stall detector still bound how long entries can wait,
@@ -166,6 +207,7 @@ class CostModelServer:
                           if min_batch is None else max(1, min_batch))
         self.max_queue = int(max_queue)
         self.metrics = ServerMetrics(metrics_reservoir)
+        self.metrics.phase_source = getattr(service, "phase_stats", None)
         self._queues: Dict[int, deque] = {
             b: deque() for b in service.buckets}
         self._n_queued = 0                      # entries across all queues
@@ -238,28 +280,58 @@ class CostModelServer:
         if self.service.fast_encode:
             key = self.service.key_of(g)
             hit = self.service.cache_lookup(key)
-            if hit is None:
-                ids = self.service.ids_for(g, key)
+            ids = None if hit is not None else self.service.ids_for(g, key)
         else:
             key, ids = self.service.entry(g)
             hit = self.service.cache_lookup(key)
+            if hit is not None:
+                ids = None
+        return self._submit_resolved(key, ids, hit)
+
+    def submit_entry(self, key: str, ids: np.ndarray, *,
+                     probe: bool = True) -> "Future[np.ndarray]":
+        """Ids-first submit: enqueue an already-featurized ``(struct
+        key, bucket-padded ids)`` entry, skipping tokenization entirely.
+
+        This is the replicated serving tier's transport seam: a remote
+        router featurizes once client-side and ships (token ids +
+        struct key); the replica's key-first LRU probe, in-flight
+        dedup, micro-batching and backpressure all behave exactly as
+        for graph submits. ``len(ids)`` must be one of the service's
+        buckets (routers reuse the service's own featurizer, so it
+        always is). ``probe=False`` skips the LRU probe — for callers
+        (the replica loop) that already probed this key themselves, so
+        the miss isn't double-counted or double-looked-up."""
+        if not self._running:
+            raise RuntimeError("server not started (call start())")
+        hit = self.service.cache_lookup(key) if probe else None
+        return self._submit_resolved(key, None if hit is not None else ids,
+                                     hit)
+
+    def _submit_resolved(self, key: str, ids: Optional[np.ndarray],
+                         hit: Optional[np.ndarray]
+                         ) -> "Future[np.ndarray]":
+        now = time.monotonic()
         if hit is not None:
             with self._work:
+                self._note_arrival_locked(now)
                 self.metrics.note_request(cache_hit=True)
             fut: "Future[np.ndarray]" = Future()
             fut.set_result(hit)
             return fut
-        req = _Request(key, ids, time.monotonic(), Future())
+        req = _Request(key, ids, now, Future())
         with self._work:
             if not self._running:      # lost a race with stop()
                 raise RuntimeError("server not started (call start())")
+            self._note_arrival_locked(now)
             if self._n_pending >= self.max_queue:
                 # bound covers coalesced waiters too: a storm on one hot
                 # in-flight key must not grow memory without limit
                 self.metrics.note_request(shed=True)
                 raise ServerOverloadedError(
                     f"queue full ({self._n_pending}/{self.max_queue} "
-                    f"outstanding requests); shedding load")
+                    f"outstanding requests); shedding load",
+                    retry_after_s=self._overload_retry_s_locked())
             self._n_pending += 1
             waiters = self._inflight.get(key)
             if waiters is not None:
@@ -278,6 +350,55 @@ class CostModelServer:
         with self._lock:
             return self._n_queued
 
+    def metrics_snapshot(self) -> Dict[str, float]:
+        """snapshot() with the live queue depth — the one-call metrics
+        payload the benches and the replicated tier's stats RPC emit
+        (includes the service's ``phase_*`` split and, when adaptive
+        flush is on, the current effective deadline gauge)."""
+        return self.metrics.snapshot(self.queue_depth())
+
+    # ------------------------------------------------------ adaptive flush
+    def _note_arrival_locked(self, now: float) -> None:
+        """EWMA of request inter-arrival time; drives the adaptive
+        flush deadline. Caller holds the queue lock."""
+        last = self._last_arrival
+        self._last_arrival = now
+        if last is None:
+            return
+        gap_us = (now - last) * 1e6
+        # clamp single gaps at 8 budgets: one long idle pause must not
+        # poison the estimate for minutes of subsequent traffic
+        gap_us = min(gap_us, 8 * self.flush_us)
+        ewma = self._arrival_ewma_us
+        self._arrival_ewma_us = gap_us if ewma is None \
+            else 0.8 * ewma + 0.2 * gap_us
+
+    def _effective_flush_us_locked(self) -> float:
+        """Deadline actually applied by the flush policy this moment."""
+        if not self.adaptive_flush:
+            return self.flush_us
+        ewma = self._arrival_ewma_us
+        if ewma is None:
+            eff = self.flush_us
+        elif ewma >= self.flush_us:
+            # arrivals slower than the whole budget: lingering cannot
+            # fill a batch, so flush (nearly) immediately — this is the
+            # cold-pass fix: a lone search thread's next candidate burst
+            # is milliseconds away, not within the deadline
+            eff = self.flush_us_min
+        else:
+            eff = min(max(self.adaptive_k * ewma, self.flush_us_min),
+                      self.flush_us)
+        self.metrics.gauges["flush_us_effective"] = eff
+        return eff
+
+    def _overload_retry_s_locked(self) -> float:
+        """Backoff hint for shed requests: about the time to drain the
+        backlog at one max_batch per deadline."""
+        batches = max(1.0, self._n_pending / max(1, self.max_batch))
+        eff_s = max(self._effective_flush_us_locked(), 100.0) / 1e6
+        return min(max(batches * eff_s, 1e-3), 0.25)
+
     # -------------------------------------------------------------- worker
     def _pick_batch_locked(self) -> Tuple[Optional[List[_Request]],
                                           Optional[float], Optional[str]]:
@@ -293,7 +414,7 @@ class CostModelServer:
         within a bounded number of cycles). Otherwise the worker sleeps
         until the nearest deadline."""
         now = time.monotonic()
-        deadline_s = self.flush_us / 1e6
+        deadline_s = self._effective_flush_us_locked() / 1e6
         oldest: Optional[float] = None
         largest: Optional[int] = None
         expired: Optional[int] = None
@@ -335,7 +456,8 @@ class CostModelServer:
         until the pipeline drains and the deadline logic takes over).
         Any head older than 4x the flush deadline preempts regardless
         (no bucket starves behind a busy one)."""
-        stale = time.monotonic() - 4 * self.flush_us / 1e6
+        stale = time.monotonic() - \
+            4 * self._effective_flush_us_locked() / 1e6
         for b, q in self._queues.items():
             if q and q[0].t_submit <= stale:
                 return self._drain_locked(b), "deadline"

@@ -107,6 +107,12 @@ class CostModelService:
     # the flag-switchable baseline the search_fleet benchmark measures.
     fast_encode: bool = True
     ids_cache_size: int = 8192
+    # Serve the conv1d arch through the fused Pallas conv tower
+    # (kernels/ops.conv_tower_apply: conv+mask+pool fused, one HBM round
+    # trip on device; interpret mode on CPU) instead of the plain-jnp
+    # forward. f32 only — the kernel's accumulation order differs from
+    # XLA's, so parity is "allclose", not bit-identical (gated in tests).
+    use_kernel: bool = False
     buckets: Optional[Tuple[int, ...]] = None   # None -> power-of-two ladder
     # batch sizes forward passes are padded up to (None -> power-of-two
     # ladder capped at max_batch). Fixing the set of executed (B, S)
@@ -125,6 +131,20 @@ class CostModelService:
         if self.dtype not in ("f32", "bf16"):
             raise ValueError(f"dtype must be f32 or bf16, got "
                              f"{self.dtype!r}")
+        if self.use_kernel:
+            if self.kind != "conv1d":
+                raise ValueError(
+                    f"use_kernel serves the fused conv tower; "
+                    f"kind={self.kind!r} is not conv1d")
+            if self.dtype != "f32":
+                raise ValueError(
+                    "use_kernel supports f32 serving only (the fused "
+                    "tower accumulates f32; quantized serving keeps "
+                    "the plain-jnp path)")
+            from repro.kernels import ops as KOPS
+
+            def apply_fn(params, ids):      # noqa: F811 — kernel forward
+                return KOPS.conv_tower_apply(params, ids)
         # Bake small (fixed, inference-only) params into the jitted
         # callable as constants: per-call python then processes ONE ids
         # array instead of flattening the whole param tree, which is
@@ -427,6 +447,24 @@ class CostModelService:
             while len(self._cache) > self.cache_size:
                 self._cache.popitem(last=False)
 
+    def export_cache(self) -> List[Tuple[str, np.ndarray]]:
+        """Snapshot the prediction LRU as ``(struct key, normalized
+        (n_heads,) row)`` pairs in LRU order (oldest first, so importing
+        into an empty service reproduces the eviction order). This is
+        the replicated tier's cache handoff: a router pre-warms a fresh
+        replica (or its own client cache) from any peer's export."""
+        with self._cache_lock:
+            return [(k, v.copy()) for k, v in self._cache.items()]
+
+    def import_cache(self, items: Sequence[Tuple[str, np.ndarray]]) -> int:
+        """Bulk-insert exported cache rows (newest-at-end, LRU bound
+        enforced). Returns the number of entries inserted. Rows must be
+        normalized (n_heads,) float32 vectors as produced by
+        :meth:`export_cache` / the shared cross-replica tier."""
+        items = [(k, np.asarray(v, np.float32)) for k, v in items]
+        self._cache_put_many(items)
+        return len(items)
+
     def cache_stats(self) -> Dict[str, float]:
         with self._cache_lock:
             hits, misses = self.cache_hits, self.cache_misses
@@ -523,6 +561,35 @@ class CostModelService:
         preds = self.forward_collect(fwd)
         self._cache_put_many(list(zip(hs, preds)))
         return preds
+
+    def predict_entries(
+            self, entries: Sequence[Tuple[str, np.ndarray]]) -> np.ndarray:
+        """Ids-first prediction: ``(struct key, bucket-padded ids)``
+        entries -> (N, n_heads) normalized rows, LRU-probed by key first
+        (hits skip the forward entirely), misses grouped per bucket and
+        forwarded. The synchronous twin of the server's
+        :meth:`~repro.core.server.CostModelServer.submit_entry` — the
+        entry point a replica drives when the transport already carries
+        token ids, so nothing is ever re-tokenized server-side."""
+        rows: List[Optional[np.ndarray]] = [None] * len(entries)
+        by_len: Dict[int, List[Tuple[int, str, np.ndarray]]] = {}
+        pending: Dict[str, List[int]] = {}
+        for i, (key, ids) in enumerate(entries):
+            if key in pending:             # in-call duplicate
+                pending[key].append(i)
+                continue
+            hit = self.cache_lookup(key)
+            if hit is not None:
+                rows[i] = hit
+                continue
+            pending[key] = [i]
+            by_len.setdefault(len(ids), []).append((i, key, ids))
+        for _, group in sorted(by_len.items()):
+            preds = self.forward_entries([(k, ids) for _, k, ids in group])
+            for (i, key, _), p in zip(group, preds):
+                for j in pending[key]:
+                    rows[j] = p
+        return np.stack(rows)
 
     def warmup(self, batch_sizes: Optional[Sequence[int]] = None,
                buckets: Optional[Sequence[int]] = None) -> int:

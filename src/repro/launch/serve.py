@@ -96,6 +96,17 @@ def main():
                          "once and runs quantized forward passes (the "
                          "denormalize path stays float32-exact; drift vs "
                          "f32 is gated in tests at Spearman >= 0.99)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through N replica processes behind the "
+                         "struct-key consistent-hash router instead of "
+                         "one in-process server (0 = in-process); each "
+                         "replica owns its params, warmup, LRU and an "
+                         "adaptive flush deadline, with a shared "
+                         "cross-replica cache tier behind them")
+    ap.add_argument("--kernel", action="store_true",
+                    help="run the conv forward through the Pallas "
+                         "conv-tower kernel (repro.kernels.ops) instead "
+                         "of the plain jnp path; f32 conv1d only")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -116,7 +127,11 @@ def main():
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160,
-                           cache_size=args.cache_size, dtype=args.dtype)
+                           cache_size=args.cache_size, dtype=args.dtype,
+                           use_kernel=args.kernel)
+    if args.replicas > 0:
+        run_replicated(svc, args)
+        return
     server = CostModelServer(svc, max_batch=args.max_batch,
                              flush_us=args.flush_us,
                              max_queue=args.max_queue)
@@ -128,6 +143,39 @@ def main():
         server.stop()                  # fail leftover futures on error
     print(f"cache after session: {svc.cache_stats()['size']} unique "
           f"entries")
+
+
+def run_replicated(svc: CostModelService, args) -> None:
+    """Serve the trained model through N replica processes behind the
+    struct-key router; the client is duck-typed, so the same closed-loop
+    driver and advisors run unchanged."""
+    from repro.serving import ReplicaClient, ServiceSpec, start_replicas
+
+    spec = ServiceSpec.from_service(svc)
+    t0 = time.perf_counter()
+    tier = start_replicas(spec, args.replicas, n_clients=1,
+                          warmup=not args.no_warmup,
+                          max_batch=args.max_batch,
+                          flush_us=args.flush_us,
+                          max_queue=args.max_queue)
+    try:
+        client = ReplicaClient(tier.client_handle(0))
+        run_session(client, client.fsvc, args, time.perf_counter() - t0)
+        for payload in client.replica_stats():
+            if payload is None:
+                continue
+            s, c = payload["server"], payload["cache"]
+            print(f"  replica {payload['replica_id']}: "
+                  f"requests={s['requests']} "
+                  f"batches={s['batches']} "
+                  f"occupancy={s['batch_occupancy']:.1f} "
+                  f"lru_hit={c['hit_rate']:.1%} "
+                  f"shared_hits={payload['shared_hits']}")
+        h = client.stats()["health"]
+        print(f"  router: sent={[h[r]['sent'] for r in sorted(h)]} "
+              f"shed={client.shed_count}")
+    finally:
+        tier.stop()
 
 
 def run_session(server: CostModelServer, svc: CostModelService, args,
@@ -142,20 +190,23 @@ def run_session(server: CostModelServer, svc: CostModelService, args,
     rng.shuffle(graphs)
 
     dt = run_clients(server, graphs, args.concurrency)
-    m = server.metrics.snapshot(server.queue_depth())
     n_targets = len(svc.heads)
     print(f"served {len(graphs)} requests x {n_targets} targets in "
           f"{dt:.2f}s ({len(graphs) / dt:.0f} req/s, "
           f"{len(graphs) * n_targets / dt:.0f} predictions/s) "
           f"at concurrency {args.concurrency}")
-    print(f"  batches={m['batches']} occupancy={m['batch_occupancy']:.1f} "
-          f"full={m['full_flushes']} deadline={m['deadline_flushes']}")
-    print(f"  latency p50={m['latency_p50_us'] / 1e3:.2f}ms "
-          f"p95={m['latency_p95_us'] / 1e3:.2f}ms "
-          f"p99={m['latency_p99_us'] / 1e3:.2f}ms")
-    print(f"  cache_hit_rate={m['cache_hit_rate']:.1%} "
-          f"coalesced={m['coalesced']} shed={m['shed']} "
-          f"max_queue_depth={m['max_queue_depth']}")
+    if hasattr(server, "metrics_snapshot"):   # in-process gateway only:
+        m = server.metrics_snapshot()         # replicas report their own
+        print(f"  batches={m['batches']} "
+              f"occupancy={m['batch_occupancy']:.1f} "
+              f"full={m['full_flushes']} "
+              f"deadline={m['deadline_flushes']}")
+        print(f"  latency p50={m['latency_p50_us'] / 1e3:.2f}ms "
+              f"p95={m['latency_p95_us'] / 1e3:.2f}ms "
+              f"p99={m['latency_p99_us'] / 1e3:.2f}ms")
+        print(f"  cache_hit_rate={m['cache_hit_rate']:.1%} "
+              f"coalesced={m['coalesced']} shed={m['shed']} "
+              f"max_queue_depth={m['max_queue_depth']}")
 
     # the advisors drive the SAME gateway (duck-typed service API)
     fusion = FusionAdvisor(server)

@@ -77,6 +77,18 @@ def _clone_args(g: Graph, name: str) -> Tuple[Graph, Dict[int, int]]:
     return new, {i: i for i in range(g.n_args)}
 
 
+def _seq_layout(g: Graph) -> bool:
+    """True when op ``i`` produces value ``n_args + i`` — the layout every
+    ``add_op``/``_Derive``-built graph has. Checked once and memoized on
+    the graph; the bulk prefix-sharing fast path below requires it."""
+    v = getattr(g, "_seq_layout_ok", None)
+    if v is None:
+        na = g.n_args
+        v = all(op.result == na + i for i, op in enumerate(g.ops))
+        g._seq_layout_ok = v
+    return v
+
+
 class _Derive:
     """Build a graph derived from a parent while tracking which new ops
     are *verbatim copies* of parent ops (same opcode/attrs/result type,
@@ -131,9 +143,45 @@ class _Derive:
             id_map[op.result] = nid
         return nid
 
+    def copy_prefix(self, k: int) -> None:
+        """Bulk-share the first *k* parent ops verbatim.
+
+        Until the first rewrite site, the copy map is the identity — a
+        per-op :meth:`copy` would append the same value, remap every
+        operand to itself, and rebuild an identical ``Op``. When the
+        parent has the sequential ``add_op`` layout and nothing has been
+        emitted yet, the whole prefix can instead be list-sliced in and
+        the parent ``Op`` objects SHARED outright (ops are immutable once
+        built — the ``struct_key`` contract — so aliasing whole ops is as
+        safe as aliasing their attrs). Profiles put per-op copying at
+        ~half of steady-state search time; this turns the untouched
+        prefix into a few C-level slice/update calls."""
+        if k <= 0:
+            return
+        p, new = self.parent, self.new
+        na = p.n_args
+        if new.ops or not _seq_layout(p):
+            for op in p.ops[:k]:           # rare fallback: odd layouts
+                self.copy(op)
+            return
+        new.values.extend(p.values[na:na + k])
+        new.ops.extend(p.ops[:k])
+        ids = range(na, na + k)
+        ident = dict(zip(ids, ids))
+        self.id_map.update(ident)
+        self.copied.update(ident)
+        self.tok_copied.update(ident)
+
     def emit(self, opcode: str, operands, out, **attrs) -> int:
-        """Emit a fresh (rewritten) op; its hash is always recomputed."""
-        return self.new.add_op(opcode, operands, out, **attrs)
+        """Emit a fresh (rewritten) op; its hash is always recomputed.
+        Inlines ``Graph.add_op`` (same layout) — emit runs once per
+        rewritten op per candidate, so the extra call + kwargs re-splat
+        showed up in search profiles."""
+        new = self.new
+        new.values.append(out)
+        nid = len(new.values) - 1
+        new.ops.append(Op(opcode, list(operands), nid, attrs))
+        return nid
 
     def alias(self, parent_vid: int, child_vid: int) -> None:
         """Map a parent value onto an existing child value (CSE dedup)."""
@@ -252,7 +300,10 @@ def _fuse(g: Graph, chains: List[List[int]]) -> Graph:
     last = {ch[-1]: ch for ch in chains}
     b = _Derive(g, g.name if g.name.endswith("_fused")
                 else g.name + "_fused")
-    for i, op in enumerate(g.ops):
+    first = min(members)
+    b.copy_prefix(first)
+    for i in range(first, len(g.ops)):
+        op = g.ops[i]
         if i in members and i not in last:
             continue
         if i in last:
@@ -315,10 +366,9 @@ class CommonSubexpression(Rewrite):
         assert _op_signature(g, g.ops[dup]) == \
             _op_signature(g, g.ops[canon]), "stale CSE site"
         b = _Derive(g)
-        for i, op in enumerate(g.ops):
-            if i == dup:
-                b.alias(op.result, b.id_map[g.ops[canon].result])
-                continue
+        b.copy_prefix(dup)
+        b.alias(g.ops[dup].result, b.id_map[g.ops[canon].result])
+        for op in g.ops[dup + 1:]:
             b.copy(op)
         return b.finish()
 
@@ -338,9 +388,8 @@ class DeadOpElimination(Rewrite):
     def apply(self, g: Graph, site: Site) -> Graph:
         (dead,) = site.detail
         b = _Derive(g)
-        for i, op in enumerate(g.ops):
-            if i == dead:
-                continue
+        b.copy_prefix(dead)
+        for op in g.ops[dead + 1:]:
             b.copy(op)
         return b.finish()
 
@@ -376,7 +425,10 @@ class RecomputeCheapProducer(Rewrite):
         assert len(consumers) >= 2, "stale recompute site"
         b = _Derive(g)
         dup_consumers = set(consumers[1:])
-        for i, op in enumerate(g.ops):
+        first = consumers[1]
+        b.copy_prefix(first)
+        for i in range(first, len(g.ops)):
+            op = g.ops[i]
             if i in dup_consumers:
                 # the private clone is itself a verbatim copy of the
                 # producer (hash-identical); the consumer re-hashes
@@ -412,7 +464,15 @@ class DtypeNarrow(Rewrite):
     def apply(self, g: Graph, site: Site) -> Graph:
         outs = set(g.outputs)
         b = _Derive(g)
-        for op in g.ops:
+        ops, n = g.ops, len(g.ops)
+        first = 0
+        while first < n:
+            t = g.values[ops[first].result]
+            if ops[first].result not in outs and t.dtype == "f32":
+                break
+            first += 1
+        b.copy_prefix(first)
+        for op in ops[first:]:
             t = g.values[op.result]
             if op.result not in outs and t.dtype == "f32":
                 b.id_map[op.result] = b.emit(
@@ -435,8 +495,34 @@ def unroll_graph(g: Graph, factor: int) -> Graph:
     new.n_args = g.n_args
     copied = {i: i for i in range(g.n_args)}
     outs = []
-    for _ in range(factor):
-        id_map = {i: i for i in range(g.n_args)}
+    na, k = g.n_args, len(g.values) - g.n_args
+    seq = _seq_layout(g)
+    for rep in range(factor):
+        if seq and rep == 0:
+            # replica 0 is an identity copy: bulk-share the parent ops
+            # (immutable) instead of re-building them one by one
+            new.values.extend(g.values[na:])
+            new.ops.extend(g.ops)
+            ids = range(na, len(g.values))
+            copied.update(zip(ids, ids))
+            outs.extend(g.outputs)
+            continue
+        if seq:
+            # replica r's ids are the parent's shifted by a constant
+            # rep*k (op i yields value na+i), so operand renaming is
+            # arithmetic — no per-op id_map dict
+            off = rep * k
+            new.values.extend(g.values[na:])
+            new.ops.extend(
+                Op(op.opcode,
+                   [o if o < na else o + off for o in op.operands],
+                   op.result + off, op.attrs)
+                for op in g.ops)
+            copied.update(zip(range(na + off, na + off + k),
+                              range(na, na + k)))
+            outs.extend(o if o < na else o + off for o in g.outputs)
+            continue
+        id_map = {i: i for i in range(na)}
         for op in g.ops:
             # fast verbatim copy (see _Derive.copy): attrs dict shared,
             # no add_op overhead — every replica op is a clean copy

@@ -1,0 +1,29 @@
+"""Replicated serving tier: struct-key-routed multi-process replicas.
+
+Layers (bottom up):
+
+* :mod:`repro.serving.transport` — picklable :class:`ServiceSpec`
+  recipe + the ids-first wire format (featurize once client-side).
+* :mod:`repro.serving.shared_cache` — :class:`SharedRowCache`, the
+  cross-replica second-chance prediction cache in shared memory.
+* :mod:`repro.serving.replica` — :func:`start_replicas` /
+  :class:`ReplicaTier`: N spawned processes, each a full
+  service+server stack with adaptive flush deadlines.
+* :mod:`repro.serving.router` — :class:`ReplicaClient`, the
+  service-shaped client: consistent-hash routing on struct keys,
+  retry/backoff honoring replica ``retry_after_s`` hints, reroute on
+  failure, shed after ``max_retries``.
+* :mod:`repro.serving.fleet` — :class:`FleetDriver`, the multi-process
+  fleet-client harness the replicated search bench drives.
+"""
+from repro.serving.replica import ReplicaTier, TierHandle, start_replicas
+from repro.serving.router import HashRing, QueueTransport, ReplicaClient
+from repro.serving.shared_cache import SharedRowCache
+from repro.serving.transport import ServiceSpec
+from repro.serving.fleet import FleetDriver, fleet_worker_main
+
+__all__ = [
+    "FleetDriver", "HashRing", "QueueTransport", "ReplicaClient",
+    "ReplicaTier", "ServiceSpec", "SharedRowCache", "TierHandle",
+    "fleet_worker_main", "start_replicas",
+]

@@ -1,0 +1,258 @@
+"""Replica process: one CostModelService + async server per process.
+
+Each replica is a spawned worker (JAX is never forked) that rebuilds the
+model from a :class:`~repro.serving.transport.ServiceSpec` and serves
+ids-first request batches through its own
+:class:`~repro.core.server.CostModelServer` — so every replica owns its
+params, its AOT warmup, its LRU and in-flight dedup, and an *adaptive*
+flush deadline that tracks its observed arrival rate. On a local-LRU
+miss the replica consults the shared cross-replica cache tier before
+computing, and publishes every computed row back to it.
+
+Request batches resolve through the server's futures; one combined
+response message per inbound batch goes back on the requesting client's
+queue once the whole batch lands (split into per-outcome messages only
+when some entries shed). Replies never re-serialize graphs — rows pack
+as one float32 block.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import threading
+import traceback
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.serving import transport as T
+from repro.serving.shared_cache import SharedRowCache
+
+
+@dataclass
+class ReplicaTier:
+    """Parent-side handle on the spawned replica fleet.
+
+    ``client_handle(i)`` returns the picklable bundle a client (in this
+    or any spawned process) needs to talk to the tier."""
+
+    procs: List[mp.Process]
+    inboxes: List[Any]                 # one request queue per replica
+    client_queues: List[Any]           # one response queue per client id
+    shared_cache: SharedRowCache
+    spec: T.ServiceSpec
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.procs)
+
+    def client_handle(self, client_id: int) -> "TierHandle":
+        return TierHandle(client_id=client_id, inboxes=self.inboxes,
+                          resp_queue=self.client_queues[client_id],
+                          n_replicas=len(self.inboxes), spec=self.spec)
+
+    def alive(self) -> List[bool]:
+        return [p.is_alive() for p in self.procs]
+
+    def stop(self, timeout: float = 10.0) -> None:
+        for q in self.inboxes:
+            try:
+                q.put((T.MSG_STOP,))
+            except Exception:
+                pass
+        for p in self.procs:
+            p.join(timeout=timeout)
+        for p in self.procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+
+    def __enter__(self) -> "ReplicaTier":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+@dataclass
+class TierHandle:
+    """What one client needs: every replica's inbox, its own response
+    queue, and the replica count (ring construction). Picklable into
+    spawned fleet-client processes."""
+
+    client_id: int
+    inboxes: List[Any]
+    resp_queue: Any
+    n_replicas: int
+    spec: Any = None
+
+
+def start_replicas(spec: T.ServiceSpec, n_replicas: int, *,
+                   n_clients: int = 1, warmup: bool = True,
+                   max_batch: Optional[int] = None,
+                   flush_us: float = 500.0,
+                   max_queue: int = 4096,
+                   adaptive_flush: bool = True,
+                   shared_slots: int = 16384,
+                   start_timeout_s: float = 180.0) -> ReplicaTier:
+    """Spawn ``n_replicas`` model-serving processes + the shared cache.
+
+    Blocks until every replica reports ready (model rebuilt, programs
+    warmed), so the first real request never pays child-process startup.
+    ``n_clients`` response queues are created up front; client ids are
+    assigned by the caller via :meth:`ReplicaTier.client_handle`."""
+    ctx = mp.get_context("spawn")
+    n_heads = len(spec.norm_stats) if isinstance(spec.norm_stats, dict) \
+        and all(isinstance(v, dict) for v in spec.norm_stats.values()) \
+        else 1
+    shared = SharedRowCache(n_heads, n_slots=shared_slots, ctx=ctx)
+    inboxes = [ctx.Queue() for _ in range(n_replicas)]
+    client_queues = [ctx.Queue() for _ in range(n_clients)]
+    ready = ctx.Queue()
+    server_kw = dict(max_batch=max_batch, flush_us=flush_us,
+                     max_queue=max_queue, adaptive_flush=adaptive_flush)
+    procs = []
+    for i in range(n_replicas):
+        p = ctx.Process(
+            target=replica_main,
+            args=(i, spec, inboxes[i], client_queues, shared,
+                  server_kw, warmup, ready),
+            name=f"costmodel-replica-{i}", daemon=True)
+        p.start()
+        procs.append(p)
+    tier = ReplicaTier(procs=procs, inboxes=inboxes,
+                       client_queues=client_queues, shared_cache=shared,
+                       spec=spec)
+    for _ in range(n_replicas):
+        try:
+            msg = ready.get(timeout=start_timeout_s)
+        except Exception:
+            tier.stop()
+            raise RuntimeError(
+                f"replica tier failed to start within "
+                f"{start_timeout_s:.0f}s") from None
+        if msg[0] != "ready":
+            tier.stop()
+            raise RuntimeError(f"replica failed to start: {msg[1]}")
+    return tier
+
+
+def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
+                 client_queues, shared: SharedRowCache,
+                 server_kw: Dict[str, Any], warmup: bool,
+                 ready) -> None:
+    """Child entry point (module-level so spawn can import it)."""
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    try:
+        from repro.core.server import (CostModelServer,
+                                       ServerOverloadedError)
+        svc = spec.build()
+        server = CostModelServer(
+            svc, **{k: v for k, v in server_kw.items() if v is not None})
+        server.start(warmup=warmup)
+    except Exception as e:                       # startup failure: report
+        ready.put(("error", f"{e!r}\n{traceback.format_exc()}"))
+        return
+    ready.put(("ready", replica_id))
+
+    shared_hits = 0
+    shared_misses = 0
+    send_lock = threading.Lock()                 # callbacks run in the
+    #                                              server worker thread
+
+    def _send(client: int, msg) -> None:
+        with send_lock:
+            client_queues[client].put(msg)
+
+    def _handle_batch(client: int, batch_id: int, keys, lens_b, ids_b):
+        nonlocal shared_hits, shared_misses
+        entries = T.unpack_entries(keys, lens_b, ids_b)
+        rids = list(range(len(entries)))
+        rows: List[Optional[Any]] = [None] * len(entries)
+        shed: List[int] = []
+        retry_after = 0.0
+        # n starts at 1: the submission loop itself holds a ref so a
+        # fast callback can't finalize the batch mid-loop.
+        pend = {"n": 1, "done": False}
+        pend_lock = threading.Lock()
+        computed: List = []                      # -> shared tier
+
+        def _finish_if_complete():
+            with pend_lock:
+                if pend["n"] != 0 or pend["done"]:
+                    return
+                pend["done"] = True
+            if computed:
+                shared.put_many(computed)
+            ok = [i for i in rids if rows[i] is not None]
+            if ok:
+                rows_b, nh = T.pack_rows([rows[i] for i in ok])
+                _send(client, (T.MSG_RES, batch_id, ok, rows_b, nh))
+            if shed:
+                _send(client, (T.MSG_OVERLOAD, batch_id, shed,
+                               retry_after))
+
+        for i, (key, ids) in enumerate(entries):
+            hit = svc.cache_lookup(key)
+            if hit is not None:
+                rows[i] = hit
+                continue
+            srow = shared.get(key)               # cross-replica tier
+            if srow is not None:
+                shared_hits += 1
+                svc.import_cache([(key, srow)])
+                rows[i] = srow
+                continue
+            shared_misses += 1
+            try:
+                fut = server.submit_entry(key, ids, probe=False)
+            except ServerOverloadedError as e:
+                shed.append(i)
+                retry_after = max(retry_after, e.retry_after_s)
+                continue
+            with pend_lock:
+                pend["n"] += 1
+
+            def _on_done(f, i=i, key=key):
+                try:
+                    row = f.result()
+                    rows[i] = row
+                    computed.append((key, row))
+                except Exception:
+                    pass                         # row stays None -> err
+                with pend_lock:
+                    pend["n"] -= 1
+                _finish_if_complete()
+
+            fut.add_done_callback(_on_done)
+        with pend_lock:
+            pend["n"] -= 1                       # release the loop's ref
+        _finish_if_complete()
+
+    while True:
+        msg = inbox.get()
+        tag = msg[0]
+        if tag == T.MSG_STOP:
+            break
+        if tag == T.MSG_REQ:
+            _, client, batch_id, keys, lens_b, ids_b = msg
+            try:
+                _handle_batch(client, batch_id, keys, lens_b, ids_b)
+            except Exception as e:               # never kill the replica
+                _send(client, (T.MSG_ERR, batch_id,
+                               list(range(len(keys))), repr(e)))
+        elif tag == T.MSG_STATS:
+            _, client, rid = msg
+            m = server.metrics_snapshot()
+            payload = {"replica_id": replica_id,
+                       "server": m,
+                       "cache": svc.cache_stats(),
+                       "shared_hits": shared_hits,
+                       "shared_misses": shared_misses}
+            _send(client, (T.MSG_STATS_RES, rid, payload))
+        elif tag == T.MSG_CLEAR:
+            _, client, rid = msg
+            with svc._cache_lock:
+                svc._cache.clear()
+                svc._ids_cache.clear()
+            _send(client, (T.MSG_STATS_RES, rid, {"cleared": True}))
+    server.stop()

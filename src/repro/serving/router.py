@@ -1,0 +1,443 @@
+"""Struct-key router client for the replicated serving tier.
+
+A :class:`ReplicaClient` looks exactly like a
+:class:`~repro.core.service.CostModelService` to callers (``heads`` /
+``resolve_target`` / ``predict_all`` / ``predict_graphs`` / ``predict``)
+but fans misses out across N replica processes:
+
+* **Featurize once, client-side.** The client owns a *featurizer*
+  service built from the same :class:`~repro.serving.transport.ServiceSpec`
+  (struct keys, incremental token ids, and — optionally — a local
+  prediction LRU). It never runs a forward pass; requests ship
+  ``(struct_key, ids)`` so replicas skip re-tokenization entirely.
+* **Consistent-hash routing.** ``HashRing`` maps each struct key to a
+  stable replica (virtual nodes keep the split even), so repeat queries
+  for a graph family land on the replica whose LRU already holds them.
+  The ring's successor order doubles as the reroute fallback chain.
+* **Retry / backoff / shed.** Overload replies carry the replica's own
+  ``retry_after_s`` hint; the client backs off (exponential, seeded by
+  the hint), reroutes around replicas in cooldown or timing out, and
+  sheds with :class:`~repro.core.server.ServerOverloadedError` once
+  ``max_retries`` rounds exhaust. Per-replica health counters
+  (sent/ok/overload/err/timeout/reroutes, consecutive failures,
+  cooldown window) feed both routing and ``stats()``.
+
+The transport is pluggable (anything with ``n_replicas`` / ``send`` /
+``recv``), so tests can drive the full retry state machine without
+spawning processes.
+"""
+from __future__ import annotations
+
+import hashlib
+import queue
+import threading
+import time
+from bisect import bisect_right
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.server import ServerOverloadedError
+from repro.serving import transport as T
+
+
+class HashRing:
+    """Consistent-hash ring over replica ids with virtual nodes.
+
+    ``route(key)`` returns replicas in ring-successor order (primary
+    first) — the natural fallback chain when the primary is shedding or
+    dead. Stable under key renaming noise because points hash the
+    replica id, and balanced because each replica contributes ``vnodes``
+    points."""
+
+    def __init__(self, n_replicas: int, vnodes: int = 32):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.n_replicas = n_replicas
+        pts: List[Tuple[int, int]] = []
+        for r in range(n_replicas):
+            for v in range(vnodes):
+                h = hashlib.sha1(f"replica-{r}-vnode-{v}".encode()).digest()
+                pts.append((int.from_bytes(h[:8], "big"), r))
+        pts.sort()
+        self._points = [p for p, _ in pts]
+        self._owners = [r for _, r in pts]
+
+    def _key_point(self, key: str) -> int:
+        if len(key) == 40:                  # struct keys are sha1 hex
+            try:
+                return int(key[:16], 16)
+            except ValueError:
+                pass
+        d = hashlib.sha1(key.encode()).digest()
+        return int.from_bytes(d[:8], "big")
+
+    def route(self, key: str, n: Optional[int] = None) -> List[int]:
+        """Distinct replicas in preference order for ``key``."""
+        want = self.n_replicas if n is None else min(n, self.n_replicas)
+        i = bisect_right(self._points, self._key_point(key))
+        out: List[int] = []
+        for j in range(len(self._owners)):
+            r = self._owners[(i + j) % len(self._owners)]
+            if r not in out:
+                out.append(r)
+                if len(out) == want:
+                    break
+        return out
+
+    def primary(self, key: str) -> int:
+        return self.route(key, 1)[0]
+
+
+class QueueTransport:
+    """Default transport: the mp queues carried by a
+    :class:`~repro.serving.replica.TierHandle`."""
+
+    def __init__(self, handle):
+        self.handle = handle
+        self.client_id = handle.client_id
+
+    @property
+    def n_replicas(self) -> int:
+        return self.handle.n_replicas
+
+    def send(self, replica: int, msg) -> None:
+        self.handle.inboxes[replica].put(msg)
+
+    def recv(self, timeout: float):
+        """Next message for this client; raises ``queue.Empty``."""
+        return self.handle.resp_queue.get(timeout=timeout)
+
+
+class _Health:
+    __slots__ = ("sent", "ok", "overload", "err", "timeout", "reroutes",
+                 "consecutive_failures", "unhealthy_until")
+
+    def __init__(self):
+        self.sent = 0
+        self.ok = 0
+        self.overload = 0
+        self.err = 0
+        self.timeout = 0
+        self.reroutes = 0
+        self.consecutive_failures = 0
+        self.unhealthy_until = 0.0
+
+    def note_ok(self):
+        self.ok += 1
+        self.consecutive_failures = 0
+        self.unhealthy_until = 0.0
+
+    def note_failure(self, kind: str, cooldown_s: float,
+                     retry_after_s: float = 0.0):
+        setattr(self, kind, getattr(self, kind) + 1)
+        self.consecutive_failures += 1
+        # Escalating cooldown: repeated failures push the replica out of
+        # the routing preference for longer; the replica's own
+        # retry_after hint floors the window.
+        w = max(retry_after_s,
+                cooldown_s * min(self.consecutive_failures, 8))
+        self.unhealthy_until = max(self.unhealthy_until,
+                                   time.monotonic() + w)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in self.__slots__}
+
+
+class ReplicaClient:
+    """Service-shaped client that routes predictions across replicas."""
+
+    def __init__(self, handle=None, spec: Optional[T.ServiceSpec] = None,
+                 *, transport=None, local_cache: bool = True,
+                 vnodes: int = 32, max_retries: int = 4,
+                 backoff_s: float = 0.005, backoff_mult: float = 2.0,
+                 timeout_s: float = 60.0, cooldown_s: float = 0.05):
+        if transport is None:
+            transport = QueueTransport(handle)
+        self.transport = transport
+        self.client_id = getattr(transport, "client_id", 0)
+        self.ring = HashRing(transport.n_replicas, vnodes=vnodes)
+        self.local_cache = local_cache
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_mult = backoff_mult
+        self.timeout_s = timeout_s
+        self.cooldown_s = cooldown_s
+        # The featurizer: same recipe as the replicas, used ONLY for
+        # struct keys / token ids / (optionally) the local row LRU.
+        if spec is None:
+            spec = handle_spec(handle)
+        self.spec = spec
+        self.fsvc = spec.build()
+        self.health = [_Health() for _ in range(transport.n_replicas)]
+        self.shed_count = 0
+        self._batch_seq = 0
+        self._lock = threading.Lock()
+        self._stray: List[Any] = []     # unknown-tag msgs seen mid-wait
+        # Reply demux: all of one client's replies arrive on ONE queue,
+        # but predict_all may be called from many threads (e.g. the
+        # closed-loop serve driver shares a client across its client
+        # threads). Whichever thread is pulling the queue delivers
+        # messages for OTHER live batches into their mailbox instead of
+        # dropping them; waiters are woken through the condition.
+        self._cond = threading.Condition()
+        self._mail: Dict[int, List[Any]] = {}     # live bid -> replies
+        self._live: set = set()                   # bids awaited somewhere
+        self._rx_busy = False                     # a thread owns recv()
+
+    # ------------------------------------------------------- service duck
+    @property
+    def heads(self):
+        return self.fsvc.heads
+
+    def resolve_target(self, target: Optional[str]) -> str:
+        return self.fsvc.resolve_target(target)
+
+    def predict_all(self, graphs) -> Dict[str, np.ndarray]:
+        if not len(graphs):
+            return {t: np.zeros((0,), np.float32) for t in self.heads}
+        keys: List[str] = []
+        vals: Dict[str, np.ndarray] = {}
+        miss_graphs: Dict[str, Any] = {}
+        for g in graphs:
+            h = self.fsvc.key_of(g)
+            keys.append(h)
+            if h in vals or h in miss_graphs:
+                continue
+            hit = self.fsvc.cache_lookup(h) if self.local_cache else None
+            if hit is not None:
+                vals[h] = hit
+            else:
+                miss_graphs[h] = g
+        if miss_graphs:
+            entries = self.fsvc.entries_for(
+                list(miss_graphs.values()), list(miss_graphs))
+            fetched = self._fetch(entries)
+            vals.update(fetched)
+            if self.local_cache:
+                self.fsvc.import_cache(list(fetched.items()))
+        raw = np.stack([vals[k] for k in keys])
+        return self.fsvc.denormalize_rows(raw)
+
+    def predict_graphs(self, graphs, target: Optional[str] = None
+                       ) -> np.ndarray:
+        return self.predict_all(graphs)[self.resolve_target(target)]
+
+    def predict(self, g, target: Optional[str] = None) -> float:
+        return float(self.predict_graphs([g], target)[0])
+
+    # --------------------------------------------------------- fetch core
+    def _next_batch_id(self) -> int:
+        with self._lock:
+            self._batch_seq += 1
+            return (self.client_id << 20) | self._batch_seq
+
+    def _pick_replica(self, key: str, now: float) -> int:
+        """Primary unless it's in failure cooldown — then the first
+        healthy successor on the ring (all cooling: primary anyway)."""
+        order = self.ring.route(key)
+        for i, r in enumerate(order):
+            if self.health[r].unhealthy_until <= now:
+                if i > 0:
+                    self.health[order[0]].reroutes += 1
+                return r
+        return order[0]
+
+    def _fetch(self, entries: Sequence[Tuple[str, np.ndarray]]
+               ) -> Dict[str, np.ndarray]:
+        """Resolve (key, ids) misses through the tier, with retry,
+        reroute-on-failure, backoff, and final shed."""
+        pending: Dict[str, np.ndarray] = dict(entries)
+        got: Dict[str, np.ndarray] = {}
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            if not pending:
+                break
+            hint = self._round(pending, got)
+            if pending and attempt < self.max_retries:
+                time.sleep(max(hint, delay))
+                delay *= self.backoff_mult
+        if pending:
+            self.shed_count += 1
+            raise ServerOverloadedError(
+                f"{len(pending)} request(s) shed after "
+                f"{self.max_retries + 1} attempts across "
+                f"{self.ring.n_replicas} replicas")
+        return got
+
+    def _recv_any(self, bids, deadline: float):
+        """Next reply addressed to one of ``bids`` (all registered in
+        ``_live``), or ``None`` once ``deadline`` passes. Thread-safe
+        over the shared per-client response queue: with one caller this
+        degenerates to a plain ``transport.recv``; with several, the
+        thread holding the transport forwards replies it doesn't own."""
+        while True:
+            with self._cond:
+                for bid in bids:
+                    box = self._mail.get(bid)
+                    if box:
+                        msg = box.pop(0)
+                        if not box:
+                            del self._mail[bid]
+                        return msg
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return None
+                if self._rx_busy:
+                    self._cond.wait(timeout=left)
+                    continue
+                self._rx_busy = True
+            try:
+                msg = self.transport.recv(
+                    max(deadline - time.monotonic(), 1e-3))
+            except queue.Empty:
+                msg = None
+            finally:
+                with self._cond:
+                    self._rx_busy = False
+                    self._cond.notify_all()
+            if msg is None:
+                return None
+            bid = msg[1] if len(msg) > 1 else None
+            if bid in bids:
+                return msg
+            with self._cond:
+                if bid in self._live:             # another thread's batch
+                    self._mail.setdefault(bid, []).append(msg)
+                    self._cond.notify_all()
+                elif msg[0] not in (T.MSG_RES, T.MSG_OVERLOAD, T.MSG_ERR,
+                                    T.MSG_STATS_RES):
+                    self._stray.append(msg)
+                # else: stale reply for a finished round — dropped
+
+    def _track(self, bids) -> None:
+        with self._cond:
+            self._live.update(bids)
+
+    def _untrack(self, bids) -> None:
+        with self._cond:
+            self._live.difference_update(bids)
+            for bid in bids:
+                self._mail.pop(bid, None)
+
+    def _round(self, pending: Dict[str, np.ndarray],
+               got: Dict[str, np.ndarray]) -> float:
+        """One routed send/collect round. Resolved keys move from
+        ``pending`` to ``got``; returns the max retry_after hint."""
+        now = time.monotonic()
+        groups: Dict[int, List[Tuple[str, np.ndarray]]] = {}
+        for key, ids in pending.items():
+            groups.setdefault(self._pick_replica(key, now), []).append(
+                (key, ids))
+        outstanding: Dict[int, Tuple[int, List[str]]] = {}
+        for replica, ents in groups.items():
+            bid = self._next_batch_id()
+            ks, lens_b, ids_b = T.pack_entries(ents)
+            try:
+                self.transport.send(
+                    replica,
+                    (T.MSG_REQ, self.client_id, bid, ks, lens_b, ids_b))
+                self.health[replica].sent += 1
+                outstanding[bid] = (replica, ks)
+            except Exception:
+                self.health[replica].note_failure(
+                    "err", self.cooldown_s)
+        hint = 0.0
+        deadline = time.monotonic() + self.timeout_s
+        tracked = set(outstanding)
+        self._track(tracked)
+        try:
+            while outstanding:
+                msg = self._recv_any(set(outstanding), deadline)
+                if msg is None:             # deadline: everything left
+                    for bid, (replica, ks) in outstanding.items():
+                        self.health[replica].note_failure(
+                            "timeout", self.cooldown_s)
+                    break
+                tag = msg[0]
+                if tag == T.MSG_RES:
+                    _, bid, rids, rows_b, nh = msg
+                    replica, ks = outstanding[bid]
+                    rows = T.unpack_rows(rows_b, nh)
+                    for rid, row in zip(rids, rows):
+                        key = ks[rid]
+                        got[key] = row
+                        pending.pop(key, None)
+                    self.health[replica].note_ok()
+                    if not any(k in pending for k in ks):
+                        outstanding.pop(bid, None)
+                elif tag == T.MSG_OVERLOAD:
+                    _, bid, rids, retry_after = msg
+                    replica, ks = outstanding.pop(bid)
+                    hint = max(hint, float(retry_after))
+                    self.health[replica].note_failure(
+                        "overload", self.cooldown_s,
+                        retry_after_s=float(retry_after))
+                elif tag == T.MSG_ERR:
+                    _, bid, rids, why = msg
+                    replica, ks = outstanding.pop(bid)
+                    self.health[replica].note_failure(
+                        "err", self.cooldown_s)
+        finally:
+            self._untrack(tracked)
+        return hint
+
+    # ------------------------------------------------------------- control
+    def _rpc(self, tag: str, timeout_s: float = 30.0
+             ) -> List[Optional[Dict[str, Any]]]:
+        """Broadcast a control message; collect one reply per replica."""
+        rids = {}
+        for r in range(self.ring.n_replicas):
+            rid = self._next_batch_id()
+            rids[rid] = r
+            try:
+                self.transport.send(r, (tag, self.client_id, rid))
+            except Exception:
+                del rids[rid]
+        out: List[Optional[Dict[str, Any]]] = \
+            [None] * self.ring.n_replicas
+        deadline = time.monotonic() + timeout_s
+        tracked = set(rids)
+        self._track(tracked)
+        try:
+            want = len(rids)
+            while want:
+                msg = self._recv_any(tracked, deadline)
+                if msg is None:
+                    break
+                if msg[0] == T.MSG_STATS_RES:
+                    out[rids[msg[1]]] = msg[2]
+                    want -= 1
+        finally:
+            self._untrack(tracked)
+        return out
+
+    def replica_stats(self) -> List[Optional[Dict[str, Any]]]:
+        return self._rpc(T.MSG_STATS)
+
+    def clear_caches(self, remote: bool = True) -> None:
+        """Drop the client featurizer caches (rows + ids) and, when
+        ``remote``, every replica's too — bench cold-pass reset."""
+        with self.fsvc._cache_lock:
+            self.fsvc._cache.clear()
+            self.fsvc._ids_cache.clear()
+        if remote:
+            self._rpc(T.MSG_CLEAR)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "client_id": self.client_id,
+            "n_replicas": self.ring.n_replicas,
+            "shed_count": self.shed_count,
+            "local_cache": self.fsvc.cache_stats(),
+            "health": {r: h.as_dict()
+                       for r, h in enumerate(self.health)},
+        }
+
+
+def handle_spec(handle) -> T.ServiceSpec:
+    spec = getattr(handle, "spec", None)
+    if spec is None:
+        raise ValueError("ReplicaClient needs a ServiceSpec: pass "
+                         "spec= or a TierHandle that carries one")
+    return spec

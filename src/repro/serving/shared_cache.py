@@ -1,0 +1,133 @@
+"""Shared cross-replica prediction cache (lock-guarded shared memory).
+
+Struct-key routing keeps each replica's *own* LRU hot, but a key's first
+query still misses everywhere — and after a reroute (replica death,
+overload cooldown) the fallback replica starts cold for that key's
+neighborhood. This tier is the fleet's second-chance cache: a fixed-slot
+open-addressed hash table in a ``multiprocessing`` shared byte array,
+consulted by every replica on local-LRU miss and published to after
+every computed batch. Writes are tiny (one 20-byte digest + the
+``n_heads`` float32 row), so a single cross-process mutex is plenty at
+cost-model scale.
+
+Slot layout (fixed ``n_heads``):
+
+  [1B valid][20B sha1 digest of the struct key][n_heads * 4B f32 row]
+
+Collisions overwrite (cache semantics); two *different* keys sharing a
+full 160-bit digest is out of scope. The table is picklable into
+spawned children (the shared block and lock travel through
+``multiprocessing``'s inheritance machinery), so one instance built by
+the parent serves every replica and client process.
+"""
+from __future__ import annotations
+
+import hashlib
+import multiprocessing as mp
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_DIGEST = 20                     # sha1
+
+
+def _digest(key: str) -> bytes:
+    """20-byte digest of a struct key. Graph.struct_key is already a
+    sha1 hexdigest, so the common case is a cheap unhex."""
+    if len(key) == 2 * _DIGEST:
+        try:
+            return bytes.fromhex(key)
+        except ValueError:
+            pass
+    return hashlib.sha1(key.encode()).digest()
+
+
+class SharedRowCache:
+    """Fixed-capacity shared-memory map: struct key -> (n_heads,) f32."""
+
+    PROBES = 8
+
+    def __init__(self, n_heads: int, n_slots: int = 16384,
+                 ctx: Optional[mp.context.BaseContext] = None):
+        ctx = ctx or mp.get_context("spawn")
+        self.n_heads = int(n_heads)
+        self.n_slots = int(n_slots)
+        self.slot_bytes = 1 + _DIGEST + 4 * self.n_heads
+        self._buf = ctx.RawArray("B", self.n_slots * self.slot_bytes)
+        self._lock = ctx.Lock()
+
+    # NOTE: np.frombuffer views are rebuilt per call — the object must
+    # stay picklable (views of shared ctypes are not).
+    def _view(self) -> np.ndarray:
+        return np.frombuffer(self._buf, np.uint8).reshape(
+            self.n_slots, self.slot_bytes)
+
+    def _slots_for(self, dig: bytes) -> List[int]:
+        h = int.from_bytes(dig[:8], "little")
+        return [(h + i) % self.n_slots for i in range(self.PROBES)]
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        dig = np.frombuffer(_digest(key), np.uint8)
+        with self._lock:
+            view = self._view()
+            for s in self._slots_for(dig.tobytes()):
+                slot = view[s]
+                if slot[0] and np.array_equal(slot[1:1 + _DIGEST], dig):
+                    return slot[1 + _DIGEST:].copy().view(np.float32)
+        return None
+
+    def get_many(self, keys: Sequence[str]
+                 ) -> List[Optional[np.ndarray]]:
+        digs = [np.frombuffer(_digest(k), np.uint8) for k in keys]
+        out: List[Optional[np.ndarray]] = [None] * len(keys)
+        with self._lock:
+            view = self._view()
+            for i, dig in enumerate(digs):
+                for s in self._slots_for(dig.tobytes()):
+                    slot = view[s]
+                    if slot[0] and np.array_equal(
+                            slot[1:1 + _DIGEST], dig):
+                        out[i] = slot[1 + _DIGEST:].copy().view(np.float32)
+                        break
+        return out
+
+    def put(self, key: str, row: np.ndarray) -> None:
+        self.put_many([(key, row)])
+
+    def put_many(self, items: Sequence[Tuple[str, np.ndarray]]) -> None:
+        packed = []
+        for key, row in items:
+            dig = _digest(key)
+            row8 = np.ascontiguousarray(
+                np.asarray(row, np.float32)).view(np.uint8)
+            packed.append((dig, np.frombuffer(dig, np.uint8), row8))
+        with self._lock:
+            view = self._view()
+            for dig, dig8, row8 in packed:
+                slots = self._slots_for(dig)
+                target = None
+                for s in slots:
+                    slot = view[s]
+                    if not slot[0]:          # first empty slot
+                        if target is None:
+                            target = s
+                        continue
+                    if np.array_equal(slot[1:1 + _DIGEST], dig8):
+                        target = s           # refresh in place
+                        break
+                if target is None:           # probe window full: evict a
+                    target = slots[dig[8] % self.PROBES]   # stable victim
+                slot = view[target]
+                slot[0] = 1
+                slot[1:1 + _DIGEST] = dig8
+                slot[1 + _DIGEST:] = row8
+
+    def fill(self) -> int:
+        """Occupied slot count (diagnostics; takes the lock)."""
+        with self._lock:
+            return int(self._view()[:, 0].sum())
+
+    def clear(self) -> None:
+        """Invalidate every slot (bench cold-pass reset)."""
+        with self._lock:
+            self._view()[:, 0] = 0

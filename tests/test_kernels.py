@@ -72,6 +72,42 @@ def test_kernel_tower_matches_model_apply():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_service_use_kernel_parity_and_guards():
+    """CostModelService(use_kernel=True) serves the same predictions as
+    the plain-jnp forward (allclose — the fused tower's accumulation
+    order differs from XLA's), and the flag rejects unsupported
+    kind/dtype combinations up front."""
+    from repro.core.service import CostModelService
+    from repro.core import trainer as TR
+    from repro.ir import dataset as DS, samplers
+
+    ds = DS.build_dataset(200, mode="ops", max_seq=64, vocab_size=512,
+                          augment_factor=1, seed=11)
+    tr, _ = ds.split(0.1)
+    res = TR.train_model("conv1d", COSTMODEL_SMALL, tr, CM.DEFAULT_HEADS,
+                         steps=60, batch_size=64)
+
+    def mk(**kw):
+        return CostModelService("conv1d", COSTMODEL_SMALL, res.params,
+                                ds.vocab, res.norm_stats, mode="ops",
+                                max_seq=64, **kw)
+
+    plain, fused = mk(), mk(use_kernel=True)
+    rng = np.random.default_rng(13)
+    gs = [samplers.sample_graph(rng) for _ in range(6)]
+    want, got = plain.predict_all(gs), fused.predict_all(gs)
+    assert set(got) == set(want)
+    for t in want:
+        np.testing.assert_allclose(got[t], want[t], rtol=2e-4, atol=2e-4)
+
+    with pytest.raises(ValueError, match="not conv1d"):
+        mk_kind = dict(mode="ops", max_seq=64, use_kernel=True)
+        CostModelService("fc", COSTMODEL_SMALL, res.params,
+                         ds.vocab, res.norm_stats, **mk_kind)
+    with pytest.raises(ValueError, match="f32"):
+        mk(use_kernel=True, dtype="bf16")
+
+
 def test_decode_attention_ref_normalizes():
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(2, 2, 4, 8)), jnp.float32)

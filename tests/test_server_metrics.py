@@ -1,0 +1,221 @@
+"""ServerMetrics + adaptive-flush unit coverage.
+
+Exercises the gateway's observability surface against known inputs — a
+stub service stands in for the JAX model, so everything here is
+deterministic and runs in milliseconds: percentile math on a known
+latency sequence, the bounded reservoir, the queue-depth gauge under
+real backpressure (sheds included), the coalesce counter, the adaptive
+flush deadline's clamp behavior, and the phase_*/gauge passthrough the
+replicated tier's stats RPC rides on.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.server import (CostModelServer, ServerMetrics,
+                               ServerOverloadedError)
+
+
+class StubService:
+    """Minimal duck-typed CostModelService: fixed bucket, zero rows."""
+
+    buckets = (8,)
+    batch_ladder = (1, 2, 4, 8)
+    max_batch = 8
+    heads = ("latency", "regs")
+
+    def __init__(self):
+        self.forwards = 0
+
+    def _ladder_batch(self, n):
+        return n
+
+    def warmup(self, batch_sizes=None):
+        pass
+
+    def cache_lookup(self, key):
+        return None
+
+    def phase_stats(self):
+        return {"hash_s": 1.5, "encode_s": 0.25}
+
+    def forward_entries_dispatch(self, entries):
+        self.forwards += 1
+        return entries
+
+    def forward_entries_collect(self, entries):
+        return np.zeros((len(entries), len(self.heads)), np.float32)
+
+
+def _ids():
+    return np.zeros(8, np.int32)
+
+
+# ------------------------------------------------------------- percentiles
+def test_percentiles_match_numpy_on_known_sequence():
+    m = ServerMetrics()
+    lats = [float(v) for v in range(1, 101)]        # 1..100 us
+    m.observe_latencies(lats)
+    snap = m.snapshot()
+    for name, q in (("p50", 50), ("p95", 95), ("p99", 99)):
+        assert snap[f"latency_{name}_us"] == pytest.approx(
+            float(np.percentile(lats, q)))
+    assert snap["latency_p50_us"] < snap["latency_p95_us"] \
+        < snap["latency_p99_us"]
+
+
+def test_empty_reservoir_reports_zero_percentiles():
+    snap = ServerMetrics().snapshot()
+    for name in ("p50", "p95", "p99"):
+        assert snap[f"latency_{name}_us"] == 0.0
+
+
+def test_reservoir_bounded_and_keeps_newest():
+    m = ServerMetrics(reservoir=8192)
+    m.observe_latencies([float(v) for v in range(10_000)])
+    assert len(m._lat_us) == 8192
+    # oldest 1808 observations fell off the deque; percentiles are over
+    # the retained window [1808, 10000)
+    kept = np.arange(1808, 10_000, dtype=np.float64)
+    snap = m.snapshot()
+    assert snap["latency_p50_us"] == pytest.approx(
+        float(np.percentile(kept, 50)))
+    assert min(m._lat_us) == 1808.0
+
+
+def test_custom_reservoir_size():
+    m = ServerMetrics(reservoir=16)
+    m.observe_latencies([float(v) for v in range(100)])
+    assert len(m._lat_us) == 16
+    assert list(m._lat_us) == [float(v) for v in range(84, 100)]
+
+
+# ---------------------------------------------------------------- counters
+def test_note_request_counters_and_hit_rate():
+    m = ServerMetrics()
+    m.note_request(cache_hit=True)
+    m.note_request(coalesced=True, queue_depth=3)
+    m.note_request(shed=True)
+    m.note_request(queue_depth=7)
+    snap = m.snapshot(queue_depth=2)
+    assert snap["requests"] == 4
+    assert snap["cache_hits"] == 1
+    assert snap["cache_hit_rate"] == pytest.approx(0.25)
+    assert snap["coalesced"] == 1
+    assert snap["shed"] == 1
+    assert snap["queue_depth"] == 2
+    assert snap["max_queue_depth"] == 7
+
+
+def test_phase_source_and_gauges_travel_in_snapshot():
+    m = ServerMetrics()
+    m.phase_source = lambda: {"hash_s": 2.0, "truncated": 3}
+    m.gauges["flush_us_effective"] = 123.0
+    snap = m.snapshot()
+    assert snap["phase_hash_s"] == 2.0
+    assert snap["phase_truncated"] == 3
+    assert snap["flush_us_effective"] == 123.0
+
+
+# ------------------------------------------------- backpressure (stub server)
+def test_queue_depth_gauge_and_shed_under_backpressure():
+    svc = StubService()
+    server = CostModelServer(svc, max_batch=8, flush_us=500.0, max_queue=4)
+    # no worker thread: the queue can only build, so the gauge is exact
+    server._running = True
+    try:
+        for i in range(4):
+            server.submit_entry(f"k{i}", _ids())
+        with pytest.raises(ServerOverloadedError) as ei:
+            server.submit_entry("k-over", _ids())
+        assert ei.value.retry_after_s > 0.0
+        snap = server.metrics_snapshot()
+        assert snap["queue_depth"] == 4
+        assert snap["max_queue_depth"] == 4
+        assert snap["shed"] == 1
+        assert snap["requests"] == 5
+    finally:
+        server._running = False
+
+
+def test_coalesce_counter_on_duplicate_inflight_key():
+    svc = StubService()
+    server = CostModelServer(svc, max_batch=8, flush_us=500.0)
+    server._running = True
+    try:
+        server.submit_entry("same", _ids())
+        server.submit_entry("same", _ids())
+        snap = server.metrics_snapshot()
+        assert snap["coalesced"] == 1
+        assert snap["queue_depth"] == 1          # one unique entry queued
+        assert server._n_pending == 2            # but two waiters pending
+    finally:
+        server._running = False
+
+
+def test_stub_end_to_end_resolves_and_observes_latency():
+    svc = StubService()
+    server = CostModelServer(svc, max_batch=4, flush_us=200.0)
+    with server:                                 # start(warmup=True) is a
+        futs = [server.submit_entry(f"g{i}", _ids())  # no-op on the stub
+                for i in range(4)]
+        rows = [f.result(timeout=10.0) for f in futs]
+    assert all(r.shape == (2,) for r in rows)
+    snap = server.metrics_snapshot()
+    assert snap["batches"] >= 1
+    assert snap["batch_occupancy"] > 0
+    assert snap["latency_p50_us"] > 0
+    assert snap["phase_hash_s"] == 1.5           # stub phase passthrough
+    assert svc.forwards >= 1
+
+
+# ---------------------------------------------------------- adaptive flush
+def _adaptive_server(**kw):
+    kw.setdefault("flush_us", 1000.0)
+    kw.setdefault("adaptive_flush", True)
+    return CostModelServer(StubService(), max_batch=8, **kw)
+
+
+def test_adaptive_flush_defaults_to_budget_before_any_arrivals():
+    s = _adaptive_server()
+    assert s._effective_flush_us_locked() == 1000.0
+
+
+def test_adaptive_flush_scales_with_arrival_rate():
+    s = _adaptive_server(adaptive_k=8.0)
+    s._arrival_ewma_us = 25.0                    # fast arrivals
+    assert s._effective_flush_us_locked() == pytest.approx(200.0)
+    assert s.metrics.gauges["flush_us_effective"] == pytest.approx(200.0)
+    snap = s.metrics.snapshot()                  # gauge rides the snapshot
+    assert snap["flush_us_effective"] == pytest.approx(200.0)
+
+
+def test_adaptive_flush_collapses_when_arrivals_outpace_budget():
+    s = _adaptive_server()
+    s._arrival_ewma_us = 5000.0                  # slower than the budget
+    assert s._effective_flush_us_locked() == s.flush_us_min
+    assert s.flush_us_min < s.flush_us
+
+
+def test_adaptive_flush_clamped_to_budget():
+    s = _adaptive_server(adaptive_k=8.0)
+    s._arrival_ewma_us = 900.0                   # k*ewma would exceed it
+    assert s._effective_flush_us_locked() == 1000.0
+
+
+def test_disabled_adaptive_flush_is_constant():
+    s = CostModelServer(StubService(), max_batch=8, flush_us=750.0)
+    s._arrival_ewma_us = 10.0
+    assert s._effective_flush_us_locked() == 750.0
+
+
+def test_arrival_ewma_clamps_idle_gaps():
+    s = _adaptive_server()
+    s._note_arrival_locked(0.0)
+    s._note_arrival_locked(60.0)                 # one minute idle
+    # a single huge gap is clamped at 8 budgets, not 60s
+    assert s._arrival_ewma_us == pytest.approx(8 * s.flush_us)
+    before = s._arrival_ewma_us
+    s._note_arrival_locked(60.0001)              # 100us gap: EWMA decays
+    assert s._arrival_ewma_us < before
