@@ -1,5 +1,12 @@
 """Soft perf gates over BENCH_*.json records (dispatched on bench name).
 
+* ``kernel_bench`` — fails if the fused Pallas serving forward drifts
+  from the plain-jnp apply (f32 max abs err, bf16 per-target Spearman)
+  or its aggregate modeled HBM-traffic reduction over the unfused
+  tower drops below ``--kernel-traffic-reduction`` (3x). The fused-vs-
+  unfused wall-clock ratio is gated only on non-interpret backends:
+  interpret-mode wall time measures the Pallas emulator, not the
+  kernel, so CPU CI skips it rather than fails.
 * ``serve_concurrent`` — fails (exit 1) if the async CostModelServer's
   req/s at concurrency 64 fell below the serialized per-request baseline
   — i.e. if micro-batching stopped paying for itself. The paper-level
@@ -123,7 +130,48 @@ def gate_search_fleet_replicated(rec, args) -> int:
     return rc
 
 
+def gate_kernel_bench(rec, args) -> int:
+    r = rec["result"]
+    conv, lstm = r["models"]["conv1d"], r["models"]["lstm"]
+    traffic = r["traffic_reduction"]
+    interp = r.get("interpret", True)
+    err = max(conv["f32_max_err"], lstm["f32_max_err"])
+    sp = min(conv["bf16_spearman_min"], lstm["bf16_spearman_min"])
+    wall = conv["wall_ratio"]
+    print(f"kernel_bench: f32 max_err={err:.2e} "
+          f"(gate: <= {args.kernel_max_err:.0e}); "
+          f"bf16 spearman_min={sp:.4f} (gate: >= {args.bf16_spearman:.2f}); "
+          f"modeled HBM traffic {traffic:.1f}x reduction "
+          f"(gate: >= {args.kernel_traffic_reduction:.1f}x); "
+          f"conv wall ratio {wall:.2f}x on backend="
+          f"{r.get('backend')!r} interpret={interp}")
+    rc = 0
+    if err > args.kernel_max_err:
+        print("PARITY GATE FAILED: fused Pallas forward no longer "
+              "matches the plain-jnp apply in f32", file=sys.stderr)
+        rc = 1
+    if sp < args.bf16_spearman:
+        print("DRIFT GATE FAILED: bf16 kernels no longer rank like the "
+              "f32 reference", file=sys.stderr)
+        rc = 1
+    if traffic < args.kernel_traffic_reduction:
+        print("TRAFFIC GATE FAILED: the fused forward's modeled HBM "
+              "traffic reduction fell below the floor", file=sys.stderr)
+        rc = 1
+    if interp:
+        print("wall-clock gate skipped: interpret-mode timing measures "
+              "the Pallas emulator, not the kernel")
+    elif wall < args.kernel_wall_ratio:
+        print("PERF GATE FAILED: the fused forward is slower than the "
+              "unfused XLA apply on a real backend", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print("kernel gate passed")
+    return rc
+
+
 GATES = {
+    "kernel_bench": gate_kernel_bench,
     "serve_concurrent": gate_serve_concurrent,
     "opt_search": gate_opt_search,
     "search_fleet": gate_search_fleet,
@@ -153,8 +201,21 @@ def main() -> int:
                          "over the thread-fleet baseline (local target "
                          "3.0; CI passes 2.0 for shared-runner noise)")
     ap.add_argument("--bf16-spearman", type=float, default=0.99,
-                    help="search_fleet: minimum per-target Spearman of "
-                         "bf16 vs f32 predictions on the bench corpus")
+                    help="search_fleet/kernel_bench: minimum per-target "
+                         "Spearman of bf16 vs f32 predictions on the "
+                         "bench corpus")
+    ap.add_argument("--kernel-max-err", type=float, default=1e-3,
+                    help="kernel_bench: max abs f32 error of the fused "
+                         "forward vs the plain-jnp apply (accumulation "
+                         "order differs, so nonzero but small)")
+    ap.add_argument("--kernel-traffic-reduction", type=float, default=3.0,
+                    help="kernel_bench: minimum aggregate modeled "
+                         "HBM-traffic reduction of the fused forward "
+                         "over the unfused tower (cost_analysis bytes)")
+    ap.add_argument("--kernel-wall-ratio", type=float, default=1.0,
+                    help="kernel_bench: minimum unfused/fused wall-clock "
+                         "ratio; only enforced on non-interpret backends "
+                         "(interpret mode emulates the kernel in python)")
     args = ap.parse_args()
     with open(args.record) as f:
         rec = json.load(f)

@@ -7,8 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention).
   operand_ablation  — Fig 6: ops-only vs ops+operands Conv1D accuracy,
                       %-exact for register pressure.
   inference_speed   — §5 claim: Conv1D model is much faster than LSTM.
-  kernel_bench      — fused Pallas tower vs unfused XLA reference: wall
-                      time (CPU proxy) + modeled HBM-traffic reduction.
+  kernel_bench      — fused Pallas serving forward (ids-in conv kernel,
+                      lstm recurrence kernel) vs the plain-XLA apply
+                      over the serving (bucket x ladder) shape set:
+                      f32/bf16 parity, wall time, and cost_analysis
+                      bytes fed through launch/roofline.py (roofline
+                      fraction + aggregate HBM-traffic reduction; gated
+                      by gate.py::gate_kernel_bench).
   serve_bench       — unified multi-target service vs three single-target
                       services on the same request stream (req/s).
   serve_concurrent  — async micro-batching CostModelServer under 1/8/64
@@ -138,34 +143,153 @@ def inference_speed(full: bool = False, seed: int = 0):
 
 
 # ------------------------------------------------------------- kernel_bench
+def _ragged_ids(rng, B, S, vocab):
+    """Random token ids with ragged valid lengths (PAD id 0), the
+    serving distribution: short graphs bucket-padded up to S."""
+    ids = rng.integers(1, vocab, (B, S))
+    lens = rng.integers(max(1, S // 4), S + 1, (B,))
+    ids[np.arange(S)[None, :] >= lens[:, None]] = 0
+    return jnp.asarray(ids, jnp.int32)
+
+
+def _cost_bytes_flops(fn, *args):
+    """(bytes accessed, flops) of ``fn`` from the compiled module's
+    cost_analysis (list-shaped on some backends)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("bytes accessed", 0.0)), float(ca.get("flops", 0.0))
+
+
 def kernel_bench(full: bool = False, seed: int = 0):
+    """Fused Pallas serving forward vs the plain-XLA apply, over the
+    serving (bucket x batch-ladder) shape set.
+
+    Per shape: f32 parity (max abs err vs conv_apply/lstm_apply), wall
+    time, and modeled HBM traffic — unfused bytes from the compiled
+    reference's ``cost_analysis()``, fused bytes from the kernel's
+    ids+params+out analytic model — both fed through
+    ``launch/roofline.py`` for roofline fractions. bf16 parity pools
+    predictions across every shape and reports per-head Spearman vs the
+    f32 reference. ``gate.py::gate_kernel_bench`` enforces f32 parity,
+    bf16 Spearman >= 0.99, and an aggregate >= 3x traffic reduction
+    always; the fused-vs-ref wall-clock ratio only on non-interpret
+    backends (interpret-mode wall time measures the Pallas emulator,
+    not the kernel)."""
     from repro.kernels import ops as KOPS
-    from repro.kernels import ref as REF
+    from repro.launch.roofline import RooflineReport
+    from repro.opt.evaluate import spearman
+
     cfg = CostModelConfig(name="bench", vocab_size=4096, max_seq=256,
                           embed_dim=64, conv_channels=(64,) * 6,
-                          fc_dims=(256, 64))
-    params = CM.conv_init(jax.random.PRNGKey(seed), cfg)
+                          fc_dims=(256, 64), lstm_hidden=64)
+    buckets = (64, 128, 256)
+    ladder = (4, 8, 32, 64) if full else (8, 32)
+    interpret = jax.default_backend() == "cpu"
+    iters, warmup = (3, 1) if interpret else (20, 3)
     rng = np.random.default_rng(seed)
-    ids = jnp.asarray(rng.integers(1, 4096, (32, 256)), jnp.int32)
-    mask = (ids != 0).astype(jnp.float32)
-    x = params["emb"][ids] * mask[..., None]
-    ws = [lyr["w"] for lyr in params["convs"]]
-    bs = [lyr["b"] for lyr in params["convs"]]
-    ref_fn = jax.jit(lambda x, m: REF.conv1d_stack_ref(x, ws, bs, m))
-    us_ref = _bench(ref_fn, x, mask)
-    _row("kernel_bench/xla_ref", us_ref, "unfused tower (6 HBM round trips)")
-    # interpret-mode wall time is NOT meaningful perf; report modeled traffic
-    B, S, C = x.shape
-    unfused = (2 * B * S * C * 4) * len(ws)   # read+write acts per layer
-    fused = B * S * C * 4 + B * C * 4         # one read, pooled write
-    _row("kernel_bench/fused_traffic_model", 0.0,
-         f"hbm_bytes {unfused/1e6:.1f}MB->{fused/1e6:.1f}MB "
-         f"({unfused/fused:.1f}x reduction)")
-    got = KOPS.conv_tower_apply(params, ids, use_kernel=True, interpret=True)
-    want = CM.conv_apply(params, ids)
-    err = float(jnp.abs(got - want).max())
-    _row("kernel_bench/allclose", 0.0, f"max_err={err:.2e}")
-    return {"max_err": err}
+    heads = CM.DEFAULT_HEADS
+
+    def _cast16(p):
+        return jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
+
+    out = {"backend": jax.default_backend(), "interpret": interpret,
+           "buckets": list(buckets), "batch_ladder": list(ladder),
+           "shapes": [], "models": {}}
+
+    for kind, init, apply_fn, fused_fn in (
+            ("conv1d", CM.conv_init, CM.conv_apply,
+             KOPS.conv_forward_apply),
+            ("lstm", CM.lstm_init, CM.lstm_apply,
+             KOPS.lstm_forward_apply)):
+        p32 = init(jax.random.PRNGKey(seed), cfg, heads=heads)
+        p16 = _cast16(p32)
+        ref_jit = jax.jit(apply_fn)
+        max_err = 0.0
+        ref_us_total = fused_us_total = 0.0
+        unfused_bytes = fused_bytes = 0.0
+        pooled = {t: {"ref": [], "bf16": []} for t in heads}
+        for S in buckets:
+            for B in ladder:
+                ids = _ragged_ids(rng, B, S, cfg.vocab_size)
+                want = {t: np.asarray(v, np.float32)
+                        for t, v in ref_jit(p32, ids).items()}
+                got = fused_fn(p32, ids)
+                err = max(float(np.abs(np.asarray(got[t]) - want[t]).max())
+                          for t in heads)
+                max_err = max(max_err, err)
+                got16 = fused_fn(p16, ids)
+                for t in heads:
+                    pooled[t]["ref"].append(want[t])
+                    pooled[t]["bf16"].append(np.asarray(got16[t],
+                                                        np.float32))
+                us_ref = _bench(ref_jit, p32, ids, iters=iters,
+                                warmup=warmup)
+                us_fused = _bench(lambda i: fused_fn(p32, i), ids,
+                                  iters=iters, warmup=warmup)
+                ref_us_total += us_ref
+                fused_us_total += us_fused
+                row = {"kind": kind, "batch": B, "seq": S,
+                       "f32_max_err": err, "ref_us": us_ref,
+                       "fused_us": us_fused}
+                if kind == "conv1d":
+                    # unfused traffic: what XLA's compiled module says it
+                    # moves; fused traffic: one read of ids+params, one
+                    # write of the predictions (the kernel's contract)
+                    ub, fl = _cost_bytes_flops(apply_fn, p32, ids)
+                    fb = float(KOPS.fused_forward_bytes(p32, B, S))
+                    unfused_bytes += ub
+                    fused_bytes += fb
+                    mk = dict(arch="costmodel-conv1d", mesh="1x1",
+                              chips=1, coll_bytes_per_chip=0.0,
+                              flops_per_chip=fl, model_flops=fl,
+                              shape=f"B{B}xS{S}")
+                    r_un = RooflineReport(bytes_per_chip=ub, **mk)
+                    r_fu = RooflineReport(bytes_per_chip=fb, **mk)
+                    row.update(
+                        unfused_bytes=ub, fused_bytes=fb,
+                        traffic_reduction=ub / max(fb, 1.0),
+                        unfused_roofline_fraction=r_un.roofline_fraction,
+                        fused_roofline_fraction=r_fu.roofline_fraction,
+                        unfused_bottleneck=r_un.bottleneck,
+                        fused_bottleneck=r_fu.bottleneck)
+                    _row(f"kernel_bench/{kind}/B{B}xS{S}", us_fused,
+                         f"err={err:.1e}"
+                         f";traffic={ub / max(fb, 1.0):.1f}x"
+                         f";roofline {r_un.roofline_fraction:.3f}->"
+                         f"{r_fu.roofline_fraction:.3f}")
+                else:
+                    _row(f"kernel_bench/{kind}/B{B}xS{S}", us_fused,
+                         f"err={err:.1e};ref_us={us_ref:.0f}")
+                out["shapes"].append(row)
+        rho = {t: spearman(np.concatenate(pooled[t]["ref"]),
+                           np.concatenate(pooled[t]["bf16"]))
+               for t in heads}
+        m = {"f32_max_err": max_err,
+             "bf16_spearman": {t: float(r) for t, r in rho.items()},
+             "bf16_spearman_min": float(min(rho.values())),
+             "ref_us_total": ref_us_total,
+             "fused_us_total": fused_us_total,
+             "wall_ratio": ref_us_total / max(fused_us_total, 1e-9)}
+        if kind == "conv1d":
+            m["unfused_bytes_total"] = unfused_bytes
+            m["fused_bytes_total"] = fused_bytes
+            m["traffic_reduction"] = unfused_bytes / max(fused_bytes, 1.0)
+        out["models"][kind] = m
+        _row(f"kernel_bench/{kind}/summary", fused_us_total,
+             f"max_err={max_err:.1e}"
+             f";bf16_spearman_min={min(rho.values()):.4f}"
+             f";wall_ratio={m['wall_ratio']:.2f}x")
+    out["traffic_reduction"] = out["models"]["conv1d"]["traffic_reduction"]
+    _row("kernel_bench/traffic", 0.0,
+         f"aggregate={out['traffic_reduction']:.1f}x reduction "
+         f"({out['models']['conv1d']['unfused_bytes_total'] / 1e6:.1f}MB->"
+         f"{out['models']['conv1d']['fused_bytes_total'] / 1e6:.1f}MB)"
+         f";interpret={interpret}")
+    return out
 
 
 # ------------------------------------------------------------ roofline_table
@@ -1122,6 +1246,15 @@ _HISTORY_SUMMARY = {
         "fleet_steady_speedup": r["fleet_steady_speedup_vs_baseline"],
         "cold_speedup": r["cold_speedup_vs_baseline"],
         "bf16_spearman_min": r["bf16"]["spearman_min"]},
+    "kernel_bench": lambda r: {
+        "traffic_reduction": r["traffic_reduction"],
+        "conv_f32_max_err": r["models"]["conv1d"]["f32_max_err"],
+        "conv_bf16_spearman_min":
+            r["models"]["conv1d"]["bf16_spearman_min"],
+        "lstm_bf16_spearman_min":
+            r["models"]["lstm"]["bf16_spearman_min"],
+        "conv_wall_ratio": r["models"]["conv1d"]["wall_ratio"],
+        "interpret": r["interpret"]},
     "search_fleet_replicated": lambda r: {
         "replicated_steady_speedup":
             r["replicated_steady_speedup_vs_baseline"],

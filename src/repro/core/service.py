@@ -107,11 +107,14 @@ class CostModelService:
     # the flag-switchable baseline the search_fleet benchmark measures.
     fast_encode: bool = True
     ids_cache_size: int = 8192
-    # Serve the conv1d arch through the fused Pallas conv tower
-    # (kernels/ops.conv_tower_apply: conv+mask+pool fused, one HBM round
-    # trip on device; interpret mode on CPU) instead of the plain-jnp
-    # forward. f32 only — the kernel's accumulation order differs from
-    # XLA's, so parity is "allclose", not bit-identical (gated in tests).
+    # Serve through the fused Pallas forward (kernels/ops.forward_apply;
+    # interpret mode on CPU) instead of the plain-jnp apply. conv1d runs
+    # the full ids-in/predictions-out kernel (gather + tower + FC +
+    # heads in one pallas_call); lstm runs the VMEM-carry recurrence
+    # kernel. Composes with dtype="bf16": kernels read bf16 params but
+    # accumulate f32 in-kernel (drift vs f32 is Spearman-gated in tests
+    # and kernel_bench). The kernels' accumulation order differs from
+    # XLA's, so f32 parity is "allclose", not bit-identical.
     use_kernel: bool = False
     buckets: Optional[Tuple[int, ...]] = None   # None -> power-of-two ladder
     # batch sizes forward passes are padded up to (None -> power-of-two
@@ -132,19 +135,16 @@ class CostModelService:
             raise ValueError(f"dtype must be f32 or bf16, got "
                              f"{self.dtype!r}")
         if self.use_kernel:
-            if self.kind != "conv1d":
-                raise ValueError(
-                    f"use_kernel serves the fused conv tower; "
-                    f"kind={self.kind!r} is not conv1d")
-            if self.dtype != "f32":
-                raise ValueError(
-                    "use_kernel supports f32 serving only (the fused "
-                    "tower accumulates f32; quantized serving keeps "
-                    "the plain-jnp path)")
             from repro.kernels import ops as KOPS
+            if self.kind not in KOPS.KERNEL_KINDS:
+                raise ValueError(
+                    f"use_kernel serves the fused Pallas forward for "
+                    f"kinds {KOPS.KERNEL_KINDS}; kind={self.kind!r} has "
+                    f"no kernel")
+            kernel_kind = self.kind
 
             def apply_fn(params, ids):      # noqa: F811 — kernel forward
-                return KOPS.conv_tower_apply(params, ids)
+                return KOPS.forward_apply(kernel_kind, params, ids)
         # Bake small (fixed, inference-only) params into the jitted
         # callable as constants: per-call python then processes ONE ids
         # array instead of flattening the whole param tree, which is

@@ -1,23 +1,40 @@
-"""Pallas TPU kernel: fused Conv1D tower + ReLU + MaxPool for the cost model.
+"""Pallas TPU kernels: the fused Conv1D serving forward for the cost model.
 
 The paper's deployed model runs thousands of inferences per compilation
 session, so this is the perf-critical hot spot. A naive XLA lowering runs
 each Conv1D as a separate HBM round-trip (6 layers x (B,S,C) activations);
 at C=64 the tower is heavily memory-bound (arithmetic intensity ~= fs*C/6
-FLOPs/byte). The fusion keeps the whole tower in VMEM: one HBM read of the
-embedded tokens, one HBM write of the pooled features — a ~7x reduction in
-HBM traffic (see benchmarks/kernel_bench.py).
+FLOPs/byte). Two fusion levels live here:
+
+* :func:`conv1d_stack_fused` — the tower only: embedded activations in,
+  pooled features out, whole tower held in VMEM (the PR-6 kernel, kept
+  as the composable building block).
+* :func:`conv_forward_fused` — the full serving forward: **token ids
+  in, per-target predictions out**. The embedding gather + pad mask run
+  inside the grid step (the ``(B,S,E)`` embedded activations are never
+  materialized in HBM — previously the single largest remaining HBM
+  round trip), and the FC stack + stacked per-target linear heads fold
+  into the same call. One HBM read of ids and params yields the
+  ``(B, n_heads)`` normalized predictions.
 
 TPU mapping:
 * channels sit on the 128-wide lane dimension (C padded to 128);
+* the embedding table is pinned whole in VMEM (index_map block 0), so
+  the gather is a VMEM-local dynamic lookup, not an HBM gather;
 * sequence sits on sublanes; each conv tap is a (S, Cin) @ (Cin, Cout)
   MXU matmul — the fs-tap conv = fs shifted matmuls accumulated in fp32;
 * grid over batch tiles; weights are broadcast to every grid step
   (index_map pins them to block 0).
 
-VMEM budget per grid step (defaults: bblk=8, S<=1024, C<=128 fp32):
-    x tile 8*1024*128*4 = 4 MiB, two ping-pong layer buffers 8 MiB,
-    weights sum(fs*C*C)*4 << 1 MiB  -> fits the ~16 MiB VMEM of v5e.
+Accumulation is float32 regardless of the parameter dtype, so bf16-cast
+params (quantized serving) run bf16 HBM reads with f32 in-kernel math;
+predictions always come out float32.
+
+VMEM budget per grid step (defaults: bblk=8, S<=1024, C<=128, V<=8192):
+    emb table 8192*128*4 = 4 MiB, x tile 8*1024*128*4 = 4 MiB, two
+    ping-pong layer buffers 8 MiB, weights sum(fs*C*C)*4 + FC/head
+    stacks << 1 MiB -> fits the ~16 MiB VMEM of v5e (bf16 params halve
+    the table and weight terms).
 """
 from __future__ import annotations
 
@@ -29,13 +46,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, mask_ref, *refs, n_layers: int, filter_sizes, out_dtype):
-    """refs = (w0, b0, w1, b1, ..., out_ref)."""
-    out_ref = refs[-1]
-    x = x_ref[...].astype(jnp.float32)            # (bblk, S, C0)
-    mask = mask_ref[...]                          # (bblk, S)
-    h = x
-    S = x.shape[1]
+def _pinned_spec(shape):
+    """BlockSpec broadcasting one whole operand to every grid step.
+
+    The index map must not close over loop variables (a late-binding
+    ``lambda i: (0,) * w.ndim`` inside the operand loop would see only
+    the final ``w``), so the rank is bound here, per call."""
+    n = len(shape)
+    return pl.BlockSpec(shape, lambda i, _n=n: (0,) * _n)
+
+
+def _tower(h, mask, refs, n_layers, filter_sizes, *, masked_pool):
+    """Conv tower + ReLU per layer + MaxPool, all in f32 VMEM.
+
+    ``refs[2i], refs[2i+1]`` are the layer-i weight/bias refs. Returns
+    (bblk, C_last) pooled features. ``masked_pool`` excludes pad
+    positions from the max (the tower-only kernel's contract, matching
+    conv1d_stack_ref(mask); all-pad rows pool to the ReLU floor of 0);
+    the full-forward kernel pools every position, exactly matching
+    core/models.py::conv_apply."""
+    S = h.shape[1]
     for i in range(n_layers):
         w = refs[2 * i][...].astype(jnp.float32)      # (fs, Cin, Cout)
         b = refs[2 * i + 1][...].astype(jnp.float32)  # (Cout,)
@@ -50,10 +80,19 @@ def _kernel(x_ref, mask_ref, *refs, n_layers: int, filter_sizes, out_dtype):
                 dimension_numbers=(((2,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
         h = jnp.maximum(acc + b, 0.0)             # ReLU
-    # MaxPool1D over valid sequence positions
+    if not masked_pool:
+        return h.max(axis=1)                      # MaxPool1D, all positions
     h = jnp.where(mask[..., None] > 0, h, -jnp.inf)
-    pooled = jnp.maximum(h.max(axis=1), 0.0)
-    out_ref[...] = pooled.astype(out_dtype)
+    return jnp.maximum(h.max(axis=1), 0.0)
+
+
+def _kernel(x_ref, mask_ref, *refs, n_layers: int, filter_sizes, out_dtype):
+    """Tower-only kernel. refs = (w0, b0, w1, b1, ..., out_ref)."""
+    out_ref = refs[-1]
+    x = x_ref[...].astype(jnp.float32)            # (bblk, S, C0)
+    mask = mask_ref[...]                          # (bblk, S)
+    out_ref[...] = _tower(x, mask, refs[:-1], n_layers, filter_sizes,
+                          masked_pool=True).astype(out_dtype)
 
 
 def conv1d_stack_fused(x: jax.Array, weights: Sequence[jax.Array],
@@ -79,8 +118,8 @@ def conv1d_stack_fused(x: jax.Array, weights: Sequence[jax.Array],
     ]
     operands = [x, mask]
     for w, b in zip(weights, biases):
-        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim))
-        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        in_specs.append(_pinned_spec(w.shape))
+        in_specs.append(_pinned_spec(b.shape))
         operands += [w, b]
 
     out = pl.pallas_call(
@@ -90,6 +129,90 @@ def conv1d_stack_fused(x: jax.Array, weights: Sequence[jax.Array],
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bblk, c_last), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, c_last), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:B]
+
+
+def _forward_kernel(ids_ref, emb_ref, *refs, n_layers: int, filter_sizes,
+                    n_fc: int):
+    """Ids-in / predictions-out kernel.
+
+    refs = (w0, b0, ..., w{L-1}, b{L-1},          conv tower
+            fw0, fb0, ..., fw{n_fc-1}, fb{n_fc-1}, hidden FC stack
+            head_w, head_b, out_ref)              stacked linear heads
+    """
+    out_ref = refs[-1]
+    ids = ids_ref[...]                            # (bblk, S) int32
+    emb = emb_ref[...].astype(jnp.float32)        # (V, E), VMEM-resident
+    # embedding gather + pad mask, entirely on-chip: the (bblk, S, E)
+    # activations live only in VMEM
+    x = jnp.take(emb, ids.reshape(-1), axis=0).reshape(
+        ids.shape + (emb.shape[1],))
+    mask = (ids != 0).astype(jnp.float32)         # PAD id is 0
+    x = x * mask[..., None]
+    conv_refs = refs[:2 * n_layers]
+    # pool over every position (pads included), exactly like conv_apply:
+    # the serving tier's bucket pad_slack relies on those semantics
+    pooled = _tower(x, mask, conv_refs, n_layers, filter_sizes,
+                    masked_pool=False)
+    # hidden FC stack (ReLU), then all heads as ONE (F, n_heads) matmul
+    off = 2 * n_layers
+    h = pooled
+    for i in range(n_fc):
+        fw = refs[off + 2 * i][...].astype(jnp.float32)
+        fb = refs[off + 2 * i + 1][...].astype(jnp.float32)
+        h = jnp.maximum(h @ fw + fb, 0.0)
+    head_w = refs[off + 2 * n_fc][...].astype(jnp.float32)   # (F, n_heads)
+    head_b = refs[off + 2 * n_fc + 1][...].astype(jnp.float32)
+    out_ref[...] = h @ head_w + head_b
+
+
+def conv_forward_fused(ids: jax.Array, emb: jax.Array,
+                       conv_weights: Sequence[jax.Array],
+                       conv_biases: Sequence[jax.Array],
+                       fc_weights: Sequence[jax.Array],
+                       fc_biases: Sequence[jax.Array],
+                       head_w: jax.Array, head_b: jax.Array, *,
+                       bblk: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """The full fused serving forward: token ids -> (B, n_heads) f32.
+
+    ids: (B, S) int32 (PAD id 0); emb: (V, E); head_w: (F, n_heads)
+    with the per-target head columns stacked. Params may be f32 or bf16
+    — accumulation is f32 in-kernel either way. One HBM read of ids and
+    params, one HBM write of the predictions; no intermediate tensor
+    (embedded activations, conv layers, pooled/FC features) ever leaves
+    VMEM."""
+    B, S = ids.shape
+    n_layers = len(conv_weights)
+    filter_sizes = tuple(int(w.shape[0]) for w in conv_weights)
+    n_fc = len(fc_weights)
+    n_heads = head_w.shape[1]
+    Bp = ((B + bblk - 1) // bblk) * bblk
+    if Bp != B:
+        ids = jnp.pad(ids, ((0, Bp - B), (0, 0)))   # pad rows are all-PAD
+    grid = (Bp // bblk,)
+
+    in_specs = [pl.BlockSpec((bblk, S), lambda i: (i, 0)),
+                _pinned_spec(emb.shape)]
+    operands = [ids, emb]
+    for w, b in zip(conv_weights, conv_biases):
+        in_specs += [_pinned_spec(w.shape), _pinned_spec(b.shape)]
+        operands += [w, b]
+    for w, b in zip(fc_weights, fc_biases):
+        in_specs += [_pinned_spec(w.shape), _pinned_spec(b.shape)]
+        operands += [w, b]
+    in_specs += [_pinned_spec(head_w.shape), _pinned_spec(head_b.shape)]
+    operands += [head_w, head_b]
+
+    out = pl.pallas_call(
+        functools.partial(_forward_kernel, n_layers=n_layers,
+                          filter_sizes=filter_sizes, n_fc=n_fc),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bblk, n_heads), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, n_heads), jnp.float32),
         interpret=interpret,
     )(*operands)
     return out[:B]

@@ -34,6 +34,49 @@ def conv1d_stack_ref(x, weights: Sequence, biases: Sequence,
     return jnp.maximum(out, 0.0) if mask is not None else out
 
 
+def lstm_scan_ref(xw, mask, wh):
+    """Masked LSTM recurrence oracle, mirroring kernels/lstm_scan.py and
+    core/models.py::lstm_encode's ``step`` (forget bias +1.0, padded
+    positions pass the carry through). xw: (B, S, 4H) precomputed input
+    gates; mask: (B, S); wh: (H, 4H). Returns (B, H) float32."""
+    xw = xw.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    wh = wh.astype(jnp.float32)
+    B = xw.shape[0]
+    hidden = wh.shape[0]
+
+    def step(carry, inp):
+        h, c = carry
+        xt, mt = inp
+        gates = xt + h @ wh
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        i, f, o = (jax.nn.sigmoid(i), jax.nn.sigmoid(f + 1.0),
+                   jax.nn.sigmoid(o))
+        g = jnp.tanh(g)
+        c_new = f * c + i * g
+        h_new = o * jnp.tanh(c_new)
+        keep = mt[:, None]
+        return (h_new * keep + h * (1 - keep),
+                c_new * keep + c * (1 - keep)), None
+
+    h0 = jnp.zeros((B, hidden), jnp.float32)
+    (h, _), _ = jax.lax.scan(step, (h0, h0),
+                             (xw.transpose(1, 0, 2), mask.T))
+    return h
+
+
+def conv_forward_ref(params, ids):
+    """Ids-in/predictions-out oracle for the fully fused conv forward:
+    core/models.py::conv_apply on f32-cast params (the fused kernel's
+    contract is exact conv_apply semantics — unmasked maxpool included —
+    with f32 accumulation regardless of the param dtype)."""
+    from repro.core.models import conv_apply
+    p32 = jax.tree.map(
+        lambda a: a.astype(jnp.float32)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    return conv_apply(p32, ids)
+
+
 def decode_attention_ref(q, k_cache, v_cache, index):
     """Grouped decode attention oracle. q: (B, nkv, G, D);
     k_cache/v_cache: (B, nkv, S, D); attends positions <= index."""

@@ -66,6 +66,10 @@ def main():
                     help="serving precision for candidate costing: bf16 "
                          "runs quantized forward passes (params cast "
                          "once; denormalize stays float32-exact)")
+    ap.add_argument("--kernel", action="store_true",
+                    help="cost candidates through the fused Pallas "
+                         "serving forward (repro.kernels.ops); composes "
+                         "with --dtype bf16")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -94,7 +98,7 @@ def main():
 
     svc = CostModelService("conv1d", cfg, res.params, ds.vocab,
                            res.norm_stats, mode="ops", max_seq=160,
-                           dtype=args.dtype)
+                           dtype=args.dtype, use_kernel=args.kernel)
     rng = np.random.default_rng(args.seed + 1)
     fams = [f for f in args.families.split(",") if f]
     graphs = [samplers.sample_graph(rng, fams[i % len(fams)])

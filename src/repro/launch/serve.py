@@ -104,9 +104,12 @@ def main():
                          "adaptive flush deadline, with a shared "
                          "cross-replica cache tier behind them")
     ap.add_argument("--kernel", action="store_true",
-                    help="run the conv forward through the Pallas "
-                         "conv-tower kernel (repro.kernels.ops) instead "
-                         "of the plain jnp path; f32 conv1d only")
+                    help="serve through the fused Pallas forward "
+                         "(repro.kernels.ops): conv1d runs the full "
+                         "ids-in/predictions-out kernel, lstm the "
+                         "VMEM-carry recurrence kernel. Composes with "
+                         "--dtype bf16 (bf16 params, f32 in-kernel "
+                         "accumulation)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -8,7 +8,9 @@ import pytest
 from repro.kernels import ops as KOPS
 from repro.kernels import ref as REF
 from repro.kernels.conv1d_stack import conv1d_stack_fused
+from repro.kernels.lstm_scan import lstm_scan_fused
 from repro.configs import COSTMODEL_SMALL
+from repro.configs.costmodel import CostModelConfig
 from repro.core import models as CM
 
 SHAPES = [
@@ -29,6 +31,30 @@ def _mk(rng, B, S, C, fs_list, dtype):
         ws.append(jnp.asarray(rng.normal(size=(fs, cin, C)) * 0.2, dtype))
         bs.append(jnp.asarray(rng.normal(size=(C,)) * 0.1, dtype))
     return x, ws, bs, mask
+
+
+def _conv_cfg(fs_list):
+    return CostModelConfig(
+        name="kernel-test", vocab_size=128, max_seq=32, embed_dim=8,
+        conv_filters=tuple(fs_list),
+        conv_channels=(8,) * len(fs_list), fc_dims=(16, 8),
+        lstm_hidden=8)
+
+
+def _ragged_ids(rng, B, S, vocab, all_pad_row=False):
+    """Random ids with ragged valid lengths; optionally one all-PAD row."""
+    ids = rng.integers(1, vocab, (B, S))
+    lens = rng.integers(1, S + 1, (B,))
+    ids[np.arange(S)[None, :] >= lens[:, None]] = 0
+    if all_pad_row:
+        ids[0] = 0
+    return jnp.asarray(ids, jnp.int32)
+
+
+def _cast16(p):
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -74,38 +100,150 @@ def test_kernel_tower_matches_model_apply():
 
 def test_service_use_kernel_parity_and_guards():
     """CostModelService(use_kernel=True) serves the same predictions as
-    the plain-jnp forward (allclose — the fused tower's accumulation
-    order differs from XLA's), and the flag rejects unsupported
-    kind/dtype combinations up front."""
+    the plain-jnp forward for both kernel kinds (allclose — the fused
+    forward's accumulation order differs from XLA's), composes with
+    dtype="bf16" (Spearman-gated drift), and rejects kernel-less kinds
+    up front with a message naming the supported ones."""
     from repro.core.service import CostModelService
     from repro.core import trainer as TR
     from repro.ir import dataset as DS, samplers
+    from repro.opt.evaluate import spearman
 
     ds = DS.build_dataset(200, mode="ops", max_seq=64, vocab_size=512,
                           augment_factor=1, seed=11)
     tr, _ = ds.split(0.1)
-    res = TR.train_model("conv1d", COSTMODEL_SMALL, tr, CM.DEFAULT_HEADS,
-                         steps=60, batch_size=64)
-
-    def mk(**kw):
-        return CostModelService("conv1d", COSTMODEL_SMALL, res.params,
-                                ds.vocab, res.norm_stats, mode="ops",
-                                max_seq=64, **kw)
-
-    plain, fused = mk(), mk(use_kernel=True)
     rng = np.random.default_rng(13)
-    gs = [samplers.sample_graph(rng) for _ in range(6)]
-    want, got = plain.predict_all(gs), fused.predict_all(gs)
-    assert set(got) == set(want)
-    for t in want:
-        np.testing.assert_allclose(got[t], want[t], rtol=2e-4, atol=2e-4)
+    gs = [samplers.sample_graph(rng) for _ in range(24)]
+    for kind in KOPS.KERNEL_KINDS:
+        res = TR.train_model(kind, COSTMODEL_SMALL, tr, CM.DEFAULT_HEADS,
+                             steps=60, batch_size=64)
 
-    with pytest.raises(ValueError, match="not conv1d"):
+        def mk(**kw):
+            return CostModelService(kind, COSTMODEL_SMALL, res.params,
+                                    ds.vocab, res.norm_stats, mode="ops",
+                                    max_seq=64, **kw)
+
+        plain, fused = mk(), mk(use_kernel=True)
+        want, got = plain.predict_all(gs), fused.predict_all(gs)
+        assert set(got) == set(want)
+        for t in want:
+            np.testing.assert_allclose(got[t], want[t],
+                                       rtol=2e-4, atol=2e-4)
+        # bf16 composes with use_kernel: bf16 param reads, f32 in-kernel
+        # accumulation; parity vs f32 is rank-order (the PR-5 drift gate)
+        quant = mk(use_kernel=True, dtype="bf16").predict_all(gs)
+        for t in want:
+            assert spearman(want[t], quant[t]) >= 0.99, t
+
+    with pytest.raises(ValueError, match="no kernel"):
         mk_kind = dict(mode="ops", max_seq=64, use_kernel=True)
         CostModelService("fc", COSTMODEL_SMALL, res.params,
                          ds.vocab, res.norm_stats, **mk_kind)
-    with pytest.raises(ValueError, match="f32"):
-        mk(use_kernel=True, dtype="bf16")
+
+
+# ------------------------------------------------- fused ids-in conv forward
+@pytest.mark.parametrize("fs_list", FILTERS)
+@pytest.mark.parametrize("heads", [None, CM.DEFAULT_HEADS])
+def test_conv_forward_fused_filter_mixes(fs_list, heads):
+    """Ids-in/predictions-out kernel vs conv_apply, every config
+    filter-size mix, both head layouts, ragged masks, one all-PAD row,
+    and B=5 (not a bblk multiple)."""
+    cfg = _conv_cfg(fs_list)
+    params = CM.conv_init(jax.random.PRNGKey(1), cfg, heads=heads)
+    rng = np.random.default_rng(hash((fs_list, bool(heads))) % 2**31)
+    ids = _ragged_ids(rng, 5, cfg.max_seq, cfg.vocab_size,
+                      all_pad_row=True)
+    got = KOPS.conv_forward_apply(params, ids, interpret=True)
+    want = REF.conv_forward_ref(params, ids)
+    if heads:
+        assert set(got) == set(heads)
+        for t in heads:
+            np.testing.assert_allclose(np.asarray(got[t]),
+                                       np.asarray(want[t]),
+                                       rtol=2e-4, atol=2e-4)
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_conv_forward_fused_matches_model_apply():
+    """The fully fused forward equals core.models.conv_apply end to end
+    (gather + tower + FC + heads), not just the ref oracle."""
+    params = CM.conv_init(jax.random.PRNGKey(3), COSTMODEL_SMALL,
+                          heads=CM.DEFAULT_HEADS)
+    rng = np.random.default_rng(5)
+    ids = _ragged_ids(rng, 9, COSTMODEL_SMALL.max_seq,
+                      COSTMODEL_SMALL.vocab_size)
+    got = KOPS.conv_forward_apply(params, ids, interpret=True)
+    want = CM.conv_apply(params, ids)
+    for t in CM.DEFAULT_HEADS:
+        np.testing.assert_allclose(np.asarray(got[t]),
+                                   np.asarray(want[t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_conv_forward_fused_bf16():
+    """bf16 params run bf16 HBM reads with f32 accumulation: output is
+    float32 and close to the f32 reference at bf16 tolerance."""
+    params = CM.conv_init(jax.random.PRNGKey(7), COSTMODEL_SMALL,
+                          heads=CM.DEFAULT_HEADS)
+    rng = np.random.default_rng(9)
+    ids = _ragged_ids(rng, 6, COSTMODEL_SMALL.max_seq,
+                      COSTMODEL_SMALL.vocab_size)
+    got = KOPS.conv_forward_apply(_cast16(params), ids, interpret=True)
+    want = REF.conv_forward_ref(params, ids)
+    for t in CM.DEFAULT_HEADS:
+        assert got[t].dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(got[t]),
+                                   np.asarray(want[t]),
+                                   rtol=5e-2, atol=5e-2)
+
+
+# --------------------------------------------------------- lstm_scan kernel
+@pytest.mark.parametrize("shape", [(1, 16, 8), (5, 32, 16), (8, 64, 16)])
+def test_lstm_scan_matches_ref(shape):
+    B, S, H = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    xw = jnp.asarray(rng.normal(size=(B, S, 4 * H)) * 0.5, jnp.float32)
+    mask = jnp.asarray(rng.random((B, S)) < 0.8, jnp.float32)
+    mask = mask.at[0].set(0.0)          # one fully masked row
+    wh = jnp.asarray(rng.normal(size=(H, 4 * H)) * 0.3, jnp.float32)
+    got = lstm_scan_fused(xw, mask, wh, bblk=4, interpret=True)
+    want = REF.lstm_scan_ref(xw, mask, wh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.abs(np.asarray(got)[0]).max() == 0.0  # masked row: h stays 0
+
+
+@pytest.mark.parametrize("heads", [None, CM.DEFAULT_HEADS])
+@pytest.mark.parametrize("dtype", ["f32", "bf16"])
+def test_lstm_forward_apply_matches_model(heads, dtype):
+    """Pallas-recurrence forward vs core.models.lstm_apply, both head
+    layouts and both dtypes (bf16 parity at bf16 tolerance — the kernel
+    accumulates f32 where the jnp scan rounds per step)."""
+    from repro.opt.evaluate import spearman
+    params = CM.lstm_init(jax.random.PRNGKey(11), COSTMODEL_SMALL,
+                          heads=heads)
+    rng = np.random.default_rng(17)
+    ids = _ragged_ids(rng, 7, COSTMODEL_SMALL.max_seq,
+                      COSTMODEL_SMALL.vocab_size, all_pad_row=True)
+    want = CM.lstm_apply(params, ids)
+    p = _cast16(params) if dtype == "bf16" else params
+    got = KOPS.lstm_forward_apply(p, ids, interpret=True)
+    names = heads or [None]
+    for t in names:
+        w = np.asarray(want[t] if t else want, np.float32)
+        g = np.asarray(got[t] if t else got, np.float32)
+        if dtype == "f32":
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-1, atol=1e-1)
+            assert spearman(w, g) >= 0.9
+
+
+def test_forward_apply_rejects_kernel_less_kinds():
+    with pytest.raises(ValueError, match="conv1d"):
+        KOPS.forward_apply("xformer", {}, jnp.zeros((1, 8), jnp.int32))
 
 
 def test_decode_attention_ref_normalizes():

@@ -135,6 +135,75 @@ def test_encode_many_matches_encode(g, max_len):
         np.testing.assert_array_equal(row, v.encode(s, max_len))
 
 
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12),
+       st.sampled_from([(2, 2, 2), (3, 5), (1,)]),
+       st.booleans(), st.booleans())
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_fused_conv_forward_matches_oracle(seed, B, fs_list, all_pad,
+                                           bf16):
+    """Property parity of the ids-in/predictions-out Pallas kernel vs
+    the kernels/ref.py oracle: random ragged masks, optional all-PAD
+    rows, batch sizes straddling the bblk tile, every filter mix, both
+    dtypes (bf16 at quantization tolerance)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.costmodel import CostModelConfig
+    from repro.core import models as CM
+    from repro.kernels import ops as KOPS
+    from repro.kernels import ref as REF
+
+    cfg = CostModelConfig(
+        name="prop", vocab_size=64, max_seq=16, embed_dim=8,
+        conv_filters=fs_list, conv_channels=(8,) * len(fs_list),
+        fc_dims=(16, 8))
+    params = CM.conv_init(jax.random.PRNGKey(seed % 997), cfg,
+                          heads=CM.DEFAULT_HEADS)
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(1, cfg.vocab_size, (B, cfg.max_seq))
+    lens = rng.integers(1, cfg.max_seq + 1, (B,))
+    ids[np.arange(cfg.max_seq)[None, :] >= lens[:, None]] = 0
+    if all_pad:
+        ids[rng.integers(0, B)] = 0
+    ids = np.asarray(ids, np.int32)
+    want = REF.conv_forward_ref(params, ids)
+    if bf16:
+        params = jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    got = KOPS.conv_forward_apply(params, ids, interpret=True)
+    tol = 5e-2 if bf16 else 2e-4
+    for t in CM.DEFAULT_HEADS:
+        np.testing.assert_allclose(np.asarray(got[t]),
+                                   np.asarray(want[t]),
+                                   rtol=tol, atol=tol)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 10),
+       st.integers(2, 24))
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lstm_scan_kernel_matches_oracle(seed, B, S):
+    """Property parity of the Pallas LSTM recurrence vs the jnp oracle
+    over random gate inputs and ragged masks (all-pad rows keep a zero
+    carry)."""
+    import jax.numpy as jnp
+    from repro.kernels import ref as REF
+    from repro.kernels.lstm_scan import lstm_scan_fused
+
+    H = 8
+    rng = np.random.default_rng(seed)
+    xw = jnp.asarray(rng.normal(size=(B, S, 4 * H)) * 0.5, jnp.float32)
+    mask = jnp.asarray(rng.random((B, S)) < 0.7, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(H, 4 * H)) * 0.3, jnp.float32)
+    got = lstm_scan_fused(xw, mask, wh, bblk=4, interpret=True)
+    want = REF.lstm_scan_ref(xw, mask, wh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    dead = np.asarray(mask).sum(1) == 0
+    assert (np.abs(np.asarray(got)[dead]).max(initial=0.0)) == 0.0
+
+
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_fusion_advisor_cost_ordering(seed):

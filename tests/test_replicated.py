@@ -89,6 +89,38 @@ def test_replicated_parity_matches_direct(corpus, service, tier):
     assert client.shed_count == 0
 
 
+def test_replicated_use_kernel_parity(corpus, service):
+    """use_kernel survives the ServiceSpec export/import round trip and
+    a spawned replica tier serving the fused Pallas forward returns the
+    same predictions as the plain-jnp single-process service (allclose
+    — the kernel's accumulation order differs from XLA's)."""
+    graphs, vocab = corpus
+    ksvc = CostModelService("conv1d", CFG, service.params, vocab,
+                            service.norm_stats, mode="ops", max_seq=64,
+                            max_batch=8, buckets=(32, 64),
+                            batch_ladder=(1, 2, 4, 8), use_kernel=True)
+    want = service.predict_all(graphs)
+    kspec = ServiceSpec.from_service(ksvc)
+    assert kspec.use_kernel is True
+    rebuilt = kspec.build()
+    assert rebuilt.use_kernel is True
+    got = rebuilt.predict_all(graphs)
+    assert set(got) == set(want)
+    for t in want:
+        np.testing.assert_allclose(got[t], want[t], rtol=2e-4, atol=2e-4)
+    ktier = start_replicas(kspec, 2, n_clients=1, flush_us=300.0,
+                           start_timeout_s=240.0)
+    try:
+        client = ReplicaClient(ktier.client_handle(0))
+        via_tier = client.predict_all(graphs)
+        for t in want:
+            np.testing.assert_allclose(via_tier[t], want[t],
+                                       rtol=2e-4, atol=2e-4)
+        assert client.shed_count == 0
+    finally:
+        ktier.stop()
+
+
 def test_struct_key_routing_preserves_replica_lru(corpus, tier):
     """Struct-key routing sends a key to the same replica every time,
     so repeat queries hit that replica's own LRU (acceptance
