@@ -170,12 +170,47 @@ def gate_kernel_bench(rec, args) -> int:
     return rc
 
 
+def gate_ingest(rec, args) -> int:
+    """Hard robustness gate on the real-MLIR front door: the arch
+    corpus must ingest without a single structured error or collapse
+    onto bare ``<unk>``, and the fuzz corpus must never escape the
+    never-raises contract."""
+    r = rec["result"]
+    arch, fuzz = r["arch"], r["fuzz"]
+    print(f"ingest: {arch['texts']} arch texts "
+          f"(errors={arch['errors']}, "
+          f"unk_rate_max={arch['unk_rate_max']:.3f}, "
+          f"oov_rate_mean={arch['oov_rate_mean']:.3f}); "
+          f"fuzz n={fuzz['n']} uncaught={fuzz['uncaught']}")
+    rc = 0
+    if arch["errors"] != 0:
+        print("INGEST GATE FAILED: real-arch lowered texts no longer "
+              "ingest cleanly", file=sys.stderr)
+        rc = 1
+    if arch["unk_rate_max"] != 0.0:
+        print("OOV GATE FAILED: some arch-corpus tokens collapsed onto "
+              "bare <unk> despite shard/byte fallback", file=sys.stderr)
+        rc = 1
+    if fuzz["n"] < 200:
+        print("FUZZ GATE FAILED: fuzz corpus shrank below 200 inputs",
+              file=sys.stderr)
+        rc = 1
+    if fuzz["uncaught"] != 0:
+        print("FUZZ GATE FAILED: predict_text raised instead of "
+              "returning a structured IngestError", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print("ingest gate passed")
+    return rc
+
+
 GATES = {
     "kernel_bench": gate_kernel_bench,
     "serve_concurrent": gate_serve_concurrent,
     "opt_search": gate_opt_search,
     "search_fleet": gate_search_fleet,
     "search_fleet_replicated": gate_search_fleet_replicated,
+    "ingest": gate_ingest,
 }
 
 

@@ -1190,6 +1190,92 @@ def transformer_extension(full: bool = False, seed: int = 0):
     return out
 
 
+# --------------------------------------------------------------- ingest
+def ingest(full: bool = False, seed: int = 0):
+    """Real-MLIR front door: arch-corpus ingestion throughput plus fuzz
+    robustness.
+
+    Lowers the per-layer StableHLO subgraphs of real architectures from
+    ``repro.configs.ARCHS``, pushes every text through
+    ``CostModelService.predict_text`` with an OOV-extended vocab (hash
+    unk shards + byte fallback), then a seeded fuzz corpus of >= 200
+    mutated/truncated/dialect-spliced texts. ``gate.py`` hard-gates
+    zero uncaught exceptions, zero arch-corpus ingest errors, and zero
+    collapse onto bare ``<unk>``."""
+    from repro.core import tokenizer as TOKZ
+    from repro.core.service import CostModelService
+    from repro.ir import frontdoor as FD
+    from repro.ir import samplers
+    from repro.ir import stablehlo as SH
+
+    names = None if full else ["qwen3-0.6b", "xlstm-125m",
+                               "whisper-small", "granite-moe-1b-a400m",
+                               "starcoder2-3b"]
+    t0 = time.perf_counter()
+    corpus = SH.lower_arch_corpus(names, seq=8)
+    lower_s = time.perf_counter() - t0
+
+    cfg = CostModelConfig(name="bench-ingest", vocab_size=1024,
+                          max_seq=256, embed_dim=16,
+                          conv_channels=(16,) * 2, fc_dims=(32,))
+    rng = np.random.default_rng(seed)
+    seqs = [TOKZ.graph_tokens(samplers.sample_graph(rng), "ops")
+            for _ in range(16)]
+    vocab = TOKZ.extend_vocab_oov(
+        TOKZ.fit_vocab(seqs, max_size=600), n_unk_buckets=32,
+        byte_fallback=True, max_size=cfg.vocab_size)
+    params = CM.conv_init(jax.random.PRNGKey(seed), cfg,
+                          heads=CM.DEFAULT_HEADS)
+    stats = {t: {"mu": 0.2, "sigma": 1.3} for t in CM.DEFAULT_HEADS}
+    svc = CostModelService("conv1d", cfg, params, vocab, stats,
+                           mode="ops", max_seq=256)
+
+    texts = [t for _, _, t in corpus]
+    t0 = time.perf_counter()
+    outs = [svc.predict_text(t) for t in texts]
+    arch_dt = time.perf_counter() - t0
+    preds = [o for o in outs if not isinstance(o, FD.IngestError)]
+    arch = {
+        "texts": len(texts),
+        "errors": len(outs) - len(preds),
+        "unk_rate_max": max((p.unk_rate for p in preds), default=1.0),
+        "oov_rate_mean": float(np.mean([p.oov_rate for p in preds]))
+        if preds else 1.0,
+        "texts_per_s": len(texts) / arch_dt if arch_dt else 0.0,
+    }
+    _row("ingest/arch_corpus", arch_dt / max(len(texts), 1) * 1e6,
+         f"texts={arch['texts']};errors={arch['errors']}"
+         f";unk_max={arch['unk_rate_max']:.2f}"
+         f";oov_mean={arch['oov_rate_mean']:.2f}")
+
+    n_fuzz = 400 if full else 200
+    mutated = FD.fuzz_corpus(texts, n_fuzz,
+                             np.random.default_rng(seed + 1))
+    ok = err = uncaught = 0
+    t0 = time.perf_counter()
+    for t in mutated:
+        try:
+            out = svc.predict_text(t)
+            if isinstance(out, FD.IngestError):
+                err += 1
+            else:
+                ok += 1
+        except Exception:
+            uncaught += 1
+    fuzz_dt = time.perf_counter() - t0
+    fuzz = {"n": len(mutated), "predictions": ok,
+            "structured_errors": err, "uncaught": uncaught,
+            "texts_per_s": len(mutated) / fuzz_dt if fuzz_dt else 0.0}
+    _row("ingest/fuzz", fuzz_dt / max(len(mutated), 1) * 1e6,
+         f"n={fuzz['n']};ok={ok};err={err};uncaught={uncaught}")
+
+    ps = svc.phase_stats()
+    return {"archs": len({a for a, _, _ in corpus}),
+            "lower_s": lower_s, "arch": arch, "fuzz": fuzz,
+            "service_oov_rate": ps["oov_rate"],
+            "ingest_errors": ps["ingest_errors"]}
+
+
 BENCHES = {
     "paper_rmse": paper_rmse,
     "operand_ablation": operand_ablation,
@@ -1203,6 +1289,7 @@ BENCHES = {
     "train_bench": train_bench,
     "transformer_extension": transformer_extension,
     "roofline_table": roofline_table,
+    "ingest": ingest,
 }
 
 
@@ -1255,6 +1342,11 @@ _HISTORY_SUMMARY = {
             r["models"]["lstm"]["bf16_spearman_min"],
         "conv_wall_ratio": r["models"]["conv1d"]["wall_ratio"],
         "interpret": r["interpret"]},
+    "ingest": lambda r: {
+        "unk_rate_max": r["arch"]["unk_rate_max"],
+        "arch_errors": r["arch"]["errors"],
+        "fuzz_uncaught": r["fuzz"]["uncaught"],
+        "ingest_texts_per_s": r["arch"]["texts_per_s"]},
     "search_fleet_replicated": lambda r: {
         "replicated_steady_speedup":
             r["replicated_steady_speedup_vs_baseline"],

@@ -217,6 +217,14 @@ class CostModelService:
         # sequences dropped past their bucket by Vocab.encode's silent
         # truncation — surfaced so bucketed-serving drops are observable
         self.truncations = 0
+        # real-MLIR front door (ingest_text/predict_text): text count,
+        # structured failures, and the running OOV token tally that
+        # phase_stats() exposes as ``oov_rate`` — vocabulary drift on
+        # live traffic is a served metric, not a silent degradation
+        self.ingested_texts = 0
+        self.ingest_errors = 0
+        self.ingest_tokens = 0
+        self.ingest_oov_tokens = 0
         # wall-clock split of the serving hot path, for benchmark
         # attribution (tokenize/encode/hash vs forward)
         self._phase_s = {"hash_s": 0.0, "encode_s": 0.0, "forward_s": 0.0}
@@ -243,12 +251,21 @@ class CostModelService:
     def phase_stats(self) -> Dict[str, float]:
         """Cumulative wall-clock split of the serving hot path: struct
         hashing vs tokenize/encode vs forward passes. Benchmarks emit
-        this so perf PRs can attribute wins per phase."""
+        this so perf PRs can attribute wins per phase. Also carries the
+        front-door ingest counters — ``oov_rate`` is the running
+        fraction of ingested-text tokens outside the vocabulary, the
+        vocabulary-drift signal the server re-exports as
+        ``phase_oov_rate`` in every metrics snapshot."""
         with self._cache_lock:
             out = dict(self._phase_s)
             out["truncations"] = self.truncations
             out["delta_encodes"] = self.delta_encodes
             out["full_encodes"] = self.full_encodes
+            out["ingested_texts"] = self.ingested_texts
+            out["ingest_errors"] = self.ingest_errors
+            out["oov_rate"] = (
+                self.ingest_oov_tokens / self.ingest_tokens
+                if self.ingest_tokens else 0.0)
         return out
 
     def key_of(self, g: Graph) -> str:
@@ -590,6 +607,72 @@ class CostModelService:
                 for j in pending[key]:
                     rows[j] = p
         return np.stack(rows)
+
+    # ------------------------------------------------- real-MLIR front door
+    def ingest_text(self, text):
+        """Featurize raw MLIR text -> :class:`~repro.ir.frontdoor.
+        TextEntry` or a structured :class:`~repro.ir.frontdoor.
+        IngestError`; never raises on input.
+
+        Structurally-parsed texts tokenize through the same
+        ``graph_tokens`` path as Graph submits and are keyed by
+        ``struct_key`` — an ingested program shares LRU entries with
+        the identical program built through the Graph API. Unparsable
+        (but lexable) texts degrade to the raw token stream under a
+        content-hash key. Either way the ids are bucket-padded, so the
+        entry drops straight into ``predict_entries`` /
+        ``submit_entry`` / the replica wire format."""
+        from repro.ir import frontdoor as FD
+        res = FD.ingest(text)
+        if isinstance(res, FD.IngestError):
+            with self._cache_lock:
+                self.ingest_errors += 1
+            return res
+        t0 = time.perf_counter()
+        toks, key = res.tokens, res.key
+        if res.graph is not None:
+            try:
+                toks = TOK.graph_tokens(res.graph, self.mode)
+            except Exception:            # tolerate parser edge cases
+                toks, key = res.tokens, FD.text_key(res.tokens)
+        bucket = self._bucket_len(len(toks))
+        ids = self.vocab.encode(toks, bucket)
+        oov = self.vocab.oov_rate(toks)
+        unk = self.vocab.unk_fraction(ids)
+        with self._cache_lock:
+            self.full_encodes += 1
+            if len(toks) > bucket:
+                self.truncations += 1
+            self.ingested_texts += 1
+            self.ingest_tokens += len(toks)
+            self.ingest_oov_tokens += int(round(oov * len(toks)))
+        self._phase_add("encode_s", time.perf_counter() - t0)
+        return FD.TextEntry(key=key, ids=ids, n_tokens=len(toks),
+                            oov_rate=oov, unk_rate=unk,
+                            dialects=res.dialects, n_ops=res.n_ops)
+
+    def predict_text(self, text):
+        """End-to-end text prediction: lowered MLIR in, denormalized
+        predictions for every head out — or a structured IngestError
+        (never an exception) when the input defeats ingestion.
+
+        Runs the ids-first ``predict_entries`` path, so the prediction
+        LRU, bucketing, and batch ladder behave exactly as for Graph
+        queries."""
+        from repro.ir import frontdoor as FD
+        ent = self.ingest_text(text)
+        if isinstance(ent, FD.IngestError):
+            return ent
+        try:
+            raw = self.predict_entries([(ent.key, ent.ids)])
+            preds = self.denormalize_rows(raw)
+        except Exception as e:
+            with self._cache_lock:
+                self.ingest_errors += 1
+            return FD.IngestError("predict", type(e).__name__,
+                                  str(e)[:200])
+        return FD.prediction_from(
+            ent, {t: float(preds[t][0]) for t in self.heads})
 
     def warmup(self, batch_sizes: Optional[Sequence[int]] = None,
                buckets: Optional[Sequence[int]] = None) -> int:

@@ -46,7 +46,10 @@ class Tensor:
 
     @property
     def bytes(self) -> int:
-        width = {"f32": 4, "bf16": 2, "f16": 2, "i8": 1, "i32": 4}[self.dtype]
+        # ingested MLIR can carry any element type (i64, f64, i1, ...);
+        # unknown widths default to 4 rather than KeyError mid-analysis
+        width = {"f32": 4, "bf16": 2, "f16": 2, "i8": 1, "i32": 4,
+                 "f64": 8, "i64": 8, "i16": 2, "i1": 1}.get(self.dtype, 4)
         return self.numel * width
 
     def mlir(self) -> str:

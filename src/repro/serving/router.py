@@ -226,6 +226,32 @@ class ReplicaClient:
     def predict(self, g, target: Optional[str] = None) -> float:
         return float(self.predict_graphs([g], target)[0])
 
+    def predict_text(self, text):
+        """Replicated-tier text prediction: the client featurizer does
+        ingest + encode + OOV accounting locally, the struct/text key
+        routes on the ring like any graph key, and the miss ships the
+        usual ``(key, ids)`` wire entry — replicas never see raw text.
+        Returns a TextPrediction or a structured IngestError (tier
+        overload/timeouts surface as ``predict``-stage errors)."""
+        from repro.ir import frontdoor as FD
+        ent = self.fsvc.ingest_text(text)
+        if isinstance(ent, FD.IngestError):
+            return ent
+        row = self.fsvc.cache_lookup(ent.key) if self.local_cache \
+            else None
+        if row is None:
+            try:
+                got = self._fetch([(ent.key, ent.ids)])
+                row = got[ent.key]
+            except Exception as e:
+                return FD.IngestError("predict", type(e).__name__,
+                                      str(e)[:200])
+            if self.local_cache:
+                self.fsvc.import_cache([(ent.key, row)])
+        preds = self.fsvc.denormalize_rows(np.asarray(row)[None])
+        return FD.prediction_from(
+            ent, {t: float(preds[t][0]) for t in self.heads})
+
     # --------------------------------------------------------- fetch core
     def _next_batch_id(self) -> int:
         with self._lock:

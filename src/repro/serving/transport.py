@@ -64,6 +64,14 @@ class ServiceSpec:
     use_kernel: bool = False
     buckets: Optional[Tuple[int, ...]] = None
     batch_ladder: Optional[Tuple[int, ...]] = None
+    # OOV vocab mode, mirrored explicitly on the wire: the pickled
+    # Vocab carries these fields itself on current builds, but the
+    # spec is the authoritative copy — build() re-applies them, so a
+    # legacy-pickled vocab (plain id dict) still comes up in the mode
+    # the router featurizes with. Router and replica MUST agree here:
+    # the shard/byte id resolution happens client-side in encode().
+    n_unk_buckets: int = 0
+    byte_fallback: bool = False
     extra: Dict[str, Any] = field(default_factory=dict)
 
     @classmethod
@@ -76,16 +84,29 @@ class ServiceSpec:
                    dtype=svc.dtype, fast_encode=svc.fast_encode,
                    use_kernel=svc.use_kernel,
                    buckets=tuple(svc.buckets),
-                   batch_ladder=tuple(svc.batch_ladder))
+                   batch_ladder=tuple(svc.batch_ladder),
+                   n_unk_buckets=getattr(svc.vocab, "n_unk_buckets", 0),
+                   byte_fallback=getattr(svc.vocab, "byte_fallback",
+                                         False))
 
     def build(self, **overrides):
         """Instantiate the CostModelService in THIS process."""
         import jax
         import jax.numpy as jnp
         from repro.core.service import CostModelService
+        from repro.core.tokenizer import Vocab
         # re-commit the numpy pytree to this process's device: the jit
         # closures index params directly, so they must be jax arrays
         params = jax.tree.map(jnp.asarray, self.params)
+        vocab = self.vocab
+        if (self.n_unk_buckets or self.byte_fallback) and \
+                isinstance(vocab, Vocab) and (
+                getattr(vocab, "n_unk_buckets", 0) != self.n_unk_buckets
+                or getattr(vocab, "byte_fallback", False)
+                != self.byte_fallback):
+            vocab = Vocab(vocab.token_to_id,
+                          n_unk_buckets=self.n_unk_buckets,
+                          byte_fallback=self.byte_fallback)
         kw = dict(mode=self.mode, max_seq=self.max_seq,
                   max_batch=self.max_batch, cache_size=self.cache_size,
                   dtype=self.dtype, fast_encode=self.fast_encode,
@@ -93,7 +114,7 @@ class ServiceSpec:
                   batch_ladder=self.batch_ladder, **self.extra)
         kw.update(overrides)
         return CostModelService(self.kind, self.cfg, params,
-                                self.vocab, self.norm_stats, **kw)
+                                vocab, self.norm_stats, **kw)
 
 
 def _to_numpy(tree):

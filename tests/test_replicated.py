@@ -89,6 +89,41 @@ def test_replicated_parity_matches_direct(corpus, service, tier):
     assert client.shed_count == 0
 
 
+def test_replicated_predict_text_parity(service, tier):
+    """The real-MLIR front door through the replica tier: same
+    predictions as the single-process service for the same text, and
+    garbage degrades to a structured IngestError, never an exception
+    (acceptance criterion: tier parity for predict_text)."""
+    from repro.ir import frontdoor as FD
+    text = FD.AFFINE_EXAMPLE
+    want = service.predict_text(text)
+    assert not isinstance(want, FD.IngestError)
+    client = ReplicaClient(tier.client_handle(1))
+    got = client.predict_text(text)
+    assert not isinstance(got, FD.IngestError)
+    assert got.key == want.key
+    for t, v in want.predictions.items():
+        np.testing.assert_allclose(got.predictions[t], v, rtol=1e-6)
+    # repeat answers from the client-side LRU, identically
+    again = client.predict_text(text)
+    np.testing.assert_allclose(
+        [again.predictions[t] for t in sorted(want.predictions)],
+        [want.predictions[t] for t in sorted(want.predictions)],
+        rtol=1e-6)
+    err = client.predict_text(b"\x00\xff")
+    assert isinstance(err, FD.IngestError)
+    # a real lowered arch subgraph rides the same path (truncated to
+    # this fixture's 64-token bucket identically on both sides)
+    from repro.ir import stablehlo as SH
+    _, _, mlir = SH.lower_arch_corpus(["qwen3-0.6b"], seq=4)[0]
+    direct = service.predict_text(mlir)
+    via = client.predict_text(mlir)
+    assert not isinstance(via, FD.IngestError)
+    assert via.key == direct.key
+    for t, v in direct.predictions.items():
+        np.testing.assert_allclose(via.predictions[t], v, rtol=1e-6)
+
+
 def test_replicated_use_kernel_parity(corpus, service):
     """use_kernel survives the ServiceSpec export/import round trip and
     a spawned replica tier serving the fused Pallas forward returns the

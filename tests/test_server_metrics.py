@@ -38,7 +38,7 @@ class StubService:
         return None
 
     def phase_stats(self):
-        return {"hash_s": 1.5, "encode_s": 0.25}
+        return {"hash_s": 1.5, "encode_s": 0.25, "oov_rate": 0.125}
 
     def forward_entries_dispatch(self, entries):
         self.forwards += 1
@@ -110,11 +110,14 @@ def test_note_request_counters_and_hit_rate():
 
 def test_phase_source_and_gauges_travel_in_snapshot():
     m = ServerMetrics()
-    m.phase_source = lambda: {"hash_s": 2.0, "truncated": 3}
+    m.phase_source = lambda: {"hash_s": 2.0, "truncated": 3,
+                              "oov_rate": 0.25}
     m.gauges["flush_us_effective"] = 123.0
     snap = m.snapshot()
     assert snap["phase_hash_s"] == 2.0
     assert snap["phase_truncated"] == 3
+    # the front door's vocabulary-drift signal must reach operators
+    assert snap["phase_oov_rate"] == 0.25
     assert snap["flush_us_effective"] == 123.0
 
 
