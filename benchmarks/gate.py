@@ -28,6 +28,11 @@
   steady-state candidates/s fell below ``--replicated-min-ratio`` x the
   GIL-convoyed thread-fleet baseline, or if the record ran fewer than 4
   replicas (the tier's win must hold at fleet scale, not just N=2).
+* ``obs_overhead`` — fails if the unified telemetry layer (head-sampled
+  tracing + metrics-registry export + drift sentinel) costs more than
+  ``--obs-min-ratio`` of untraced gateway throughput, if forced-sampling
+  span trees reconstruct below ``--obs-min-completeness`` complete, or
+  if registry snapshots stop carrying the drift gauges.
 
     python benchmarks/gate.py bench-artifacts/BENCH_serve_concurrent.json
     python benchmarks/gate.py bench-artifacts/BENCH_opt_search.json
@@ -170,6 +175,41 @@ def gate_kernel_bench(rec, args) -> int:
     return rc
 
 
+def gate_obs_overhead(rec, args) -> int:
+    """Observability-tax gate: the unified telemetry layer (tracing +
+    registry export + drift sentinel) must keep >= ``--obs-min-ratio``
+    of the untraced gateway throughput, forced-sampling span trees must
+    reconstruct >= ``--obs-min-completeness`` complete, and every
+    registry snapshot must carry the drift gauges."""
+    r = rec["result"]
+    ratio = r["overhead_ratio"]
+    comp = r["trace"]["completeness"]
+    gauges = bool(r.get("drift_gauges_present"))
+    print(f"obs_overhead: {r['req_s_on']:.0f} req/s traced vs "
+          f"{r['req_s_off']:.0f} untraced -> {ratio:.3f}x "
+          f"(gate: >= {args.obs_min_ratio:.2f}x); span-tree "
+          f"completeness {comp:.3f} over {r['trace']['n_traces']} "
+          f"traces (gate: >= {args.obs_min_completeness:.2f}); "
+          f"drift_gauges_present={gauges}; "
+          f"drift_scored={r.get('drift_scored', 0)}")
+    rc = 0
+    if ratio < args.obs_min_ratio:
+        print("PERF GATE FAILED: the telemetry layer's overhead on the "
+              "gateway hot path exceeds the budget", file=sys.stderr)
+        rc = 1
+    if comp < args.obs_min_completeness:
+        print("TRACE GATE FAILED: sampled requests no longer "
+              "reconstruct complete span trees", file=sys.stderr)
+        rc = 1
+    if not gauges:
+        print("DRIFT GATE FAILED: registry snapshots are missing the "
+              "drift sentinel gauges", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print("obs gate passed")
+    return rc
+
+
 def gate_ingest(rec, args) -> int:
     """Hard robustness gate on the real-MLIR front door: the arch
     corpus must ingest without a single structured error or collapse
@@ -211,6 +251,7 @@ GATES = {
     "search_fleet": gate_search_fleet,
     "search_fleet_replicated": gate_search_fleet_replicated,
     "ingest": gate_ingest,
+    "obs_overhead": gate_obs_overhead,
 }
 
 
@@ -247,6 +288,14 @@ def main() -> int:
                     help="kernel_bench: minimum aggregate modeled "
                          "HBM-traffic reduction of the fused forward "
                          "over the unfused tower (cost_analysis bytes)")
+    ap.add_argument("--obs-min-ratio", type=float, default=0.97,
+                    help="obs_overhead: minimum traced/untraced req/s "
+                         "ratio on the gateway hot path (the telemetry "
+                         "tax budget)")
+    ap.add_argument("--obs-min-completeness", type=float, default=0.99,
+                    help="obs_overhead: minimum fraction of sampled "
+                         "requests whose span trees reconstruct "
+                         "complete (one root, no orphans)")
     ap.add_argument("--kernel-wall-ratio", type=float, default=1.0,
                     help="kernel_bench: minimum unfused/fused wall-clock "
                          "ratio; only enforced on non-interpret backends "

@@ -1,0 +1,115 @@
+"""Render a markdown trend table from BENCH_history.json.
+
+The history file (``benchmarks/run.py --history``) accumulates one
+rolled-up entry per bench run — git sha + the headline scalars of each
+bench. This renders the trajectory as one markdown table per bench:
+the metric's value over the last N entries, each with its sha and the
+delta vs the previous entry, so a PR review answers "did the serving
+benches move, and when" without opening any JSON.
+
+    PYTHONPATH=src python -m benchmarks.render_history \
+        [--history benchmarks/BENCH_history.json] [--last 10] \
+        [--out BENCH_TRENDS.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List
+
+
+def load_entries(path: str) -> List[Dict[str, Any]]:
+    with open(path) as f:
+        hist = json.load(f)
+    return list(hist.get("entries", []))
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _delta(cur: Any, prev: Any) -> str:
+    """Signed delta vs the previous entry carrying this metric."""
+    if not (isinstance(cur, (int, float)) and
+            isinstance(prev, (int, float))) or \
+            isinstance(cur, bool) or isinstance(prev, bool):
+        return ""
+    d = cur - prev
+    if d == 0:
+        return "="
+    return f"{d:+.3g}"
+
+
+def bench_table(name: str, entries: List[Dict[str, Any]],
+                last: int) -> List[str]:
+    """One markdown table: rows = history entries (oldest first),
+    columns = that bench's headline metrics, each cell value(delta)."""
+    rows = [(e.get("ts", "?"), e.get("sha", "?"),
+             e["benches"][name]) for e in entries
+            if isinstance(e.get("benches"), dict)
+            and name in e["benches"]]
+    if not rows:
+        return []
+    rows = rows[-last:]
+    metrics: List[str] = []
+    for _, _, b in rows:               # stable union of metric keys
+        for k in b:
+            if k not in metrics:
+                metrics.append(k)
+    out = [f"### {name}", "",
+           "| date | sha | " + " | ".join(metrics) + " |",
+           "|---|---|" + "---|" * len(metrics)]
+    prev: Dict[str, Any] = {}
+    for ts, sha, b in rows:
+        cells = []
+        for m in metrics:
+            if m not in b:
+                cells.append("—")
+                continue
+            d = _delta(b[m], prev.get(m))
+            cells.append(f"{_fmt(b[m])}" + (f" ({d})" if d else ""))
+            prev[m] = b[m]
+        out.append(f"| {ts[:10]} | `{sha}` | " + " | ".join(cells)
+                   + " |")
+    out.append("")
+    return out
+
+
+def render(entries: List[Dict[str, Any]], last: int) -> str:
+    names: List[str] = []
+    for e in entries:                  # first-seen bench order
+        for n in (e.get("benches") or {}):
+            if n not in names:
+                names.append(n)
+    lines = ["# Bench trends", "",
+             f"{len(entries)} history entries; last {last} shown "
+             f"per bench. Value (delta vs previous run of that "
+             f"bench).", ""]
+    for n in names:
+        lines += bench_table(n, entries, last)
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default="benchmarks/BENCH_history.json")
+    ap.add_argument("--last", type=int, default=10,
+                    help="entries per bench table")
+    ap.add_argument("--out", default=None,
+                    help="write markdown here (default: stdout)")
+    args = ap.parse_args()
+    md = render(load_entries(args.history), args.last)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"wrote {args.out}")
+    else:
+        print(md, end="")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,6 +72,10 @@ class _Request:
     ids: np.ndarray
     t_submit: float
     future: "Future[np.ndarray]"
+    # optional TraceContext (duck-typed: .trace_id/.span_id) — carried so
+    # the worker can emit queue-wait/forward spans retroactively for
+    # sampled requests; None for the untraced 1-1/sample_every majority
+    trace: Any = None
 
 
 class ServerMetrics:
@@ -179,8 +183,12 @@ class CostModelServer:
                  metrics_reservoir: int = 8192,
                  adaptive_flush: bool = False,
                  flush_us_min: Optional[float] = None,
-                 adaptive_k: float = 8.0):
+                 adaptive_k: float = 8.0,
+                 tracer=None):
         self.service = service
+        # optional repro.obs.trace.Tracer; every hook is None-guarded so
+        # the untraced server keeps zero obs imports and zero overhead
+        self.tracer = tracer
         self.max_batch = min(max_batch or service.max_batch,
                              service.max_batch)
         self.flush_us = float(flush_us)
@@ -266,7 +274,7 @@ class CostModelServer:
         self.stop()
 
     # --------------------------------------------------------------- submit
-    def submit(self, g: Graph) -> "Future[np.ndarray]":
+    def submit(self, g: Graph, trace=None) -> "Future[np.ndarray]":
         """Enqueue one graph; resolves to its (n_heads,) normalized row.
 
         Fast paths: an LRU hit resolves immediately without queueing —
@@ -286,10 +294,11 @@ class CostModelServer:
             hit = self.service.cache_lookup(key)
             if hit is not None:
                 ids = None
-        return self._submit_resolved(key, ids, hit)
+        return self._submit_resolved(key, ids, hit, trace=trace)
 
     def submit_entry(self, key: str, ids: np.ndarray, *,
-                     probe: bool = True) -> "Future[np.ndarray]":
+                     probe: bool = True, trace=None
+                     ) -> "Future[np.ndarray]":
         """Ids-first submit: enqueue an already-featurized ``(struct
         key, bucket-padded ids)`` entry, skipping tokenization entirely.
 
@@ -306,20 +315,23 @@ class CostModelServer:
             raise RuntimeError("server not started (call start())")
         hit = self.service.cache_lookup(key) if probe else None
         return self._submit_resolved(key, None if hit is not None else ids,
-                                     hit)
+                                     hit, trace=trace)
 
     def _submit_resolved(self, key: str, ids: Optional[np.ndarray],
-                         hit: Optional[np.ndarray]
+                         hit: Optional[np.ndarray], trace=None
                          ) -> "Future[np.ndarray]":
         now = time.monotonic()
+        tr = self.tracer
         if hit is not None:
             with self._work:
                 self._note_arrival_locked(now)
                 self.metrics.note_request(cache_hit=True)
+            if tr is not None and trace is not None:
+                tr.emit("server.cache_hit", trace, 0.0)
             fut: "Future[np.ndarray]" = Future()
             fut.set_result(hit)
             return fut
-        req = _Request(key, ids, now, Future())
+        req = _Request(key, ids, now, Future(), trace)
         with self._work:
             if not self._running:      # lost a race with stop()
                 raise RuntimeError("server not started (call start())")
@@ -328,10 +340,15 @@ class CostModelServer:
                 # bound covers coalesced waiters too: a storm on one hot
                 # in-flight key must not grow memory without limit
                 self.metrics.note_request(shed=True)
+                retry_s = self._overload_retry_s_locked()
+                if tr is not None:     # sheds are always-on telemetry
+                    tr.error_span("server.shed", trace,
+                                  retry_after_s=retry_s,
+                                  pending=self._n_pending)
                 raise ServerOverloadedError(
                     f"queue full ({self._n_pending}/{self.max_queue} "
                     f"outstanding requests); shedding load",
-                    retry_after_s=self._overload_retry_s_locked())
+                    retry_after_s=retry_s)
             self._n_pending += 1
             waiters = self._inflight.get(key)
             if waiters is not None:
@@ -521,18 +538,19 @@ class CostModelServer:
                 inflight = None
 
     def _dispatch(self, batch: List[_Request], path: str):
+        t_disp = time.monotonic()
         entries = [(r.key, r.ids) for r in batch]
         try:
             handle = self.service.forward_entries_dispatch(entries)
         except Exception as e:          # resolve waiters, don't kill worker
-            return ("err", e)
+            return ("err", e, t_disp, path)
         self.metrics.count(f"{path}_flushes")
         self.metrics.count("batches")
         self.metrics.count("batched_entries", len(batch))
-        return ("ok", handle)
+        return ("ok", handle, t_disp, path)
 
     def _collect_resolve(self, item: Tuple[List[_Request], Any]) -> None:
-        batch, (status, payload) = item
+        batch, (status, payload, t_disp, path) = item
         if status == "ok":
             try:
                 rows = self.service.forward_entries_collect(payload)
@@ -545,9 +563,22 @@ class CostModelServer:
             waiters = [self._inflight.pop(r.key, [r]) for r in batch]
             self._n_pending -= sum(len(ws) for ws in waiters)
         now = time.monotonic()
+        tr = self.tracer
         lats = []
         for i, ws in enumerate(waiters):
-            for w in ws:
+            for j, w in enumerate(ws):
+                if tr is not None and w.trace is not None:
+                    # retroactive spans: the request's queue wait and the
+                    # batch it rode are only known here. Emitted BEFORE
+                    # set_result so a callback on the future (the replica
+                    # loop shipping spans back) already sees them.
+                    tr.emit("server.queue", w.trace,
+                            max(t_disp - w.t_submit, 0.0),
+                            tags={"coalesced": int(j > 0)})
+                    tr.emit("server.forward", w.trace,
+                            max(now - t_disp, 0.0),
+                            status="ok" if err is None else "err",
+                            tags={"batch_size": len(batch), "path": path})
                 if err is not None:
                     w.future.set_exception(err)
                 else:
@@ -572,12 +603,31 @@ class CostModelServer:
         graphs coalesce into shared forward passes."""
         if not graphs:
             return {t: np.zeros((0,), np.float32) for t in self.heads}
-        if len(graphs) == 1:           # compiler hot path: one candidate
-            row = self.submit(graphs[0]).result(timeout=timeout)
-            return self.service.denormalize_rows(row[None])
-        futs = [self.submit(g) for g in graphs]
-        raw = np.stack([f.result(timeout=timeout) for f in futs])
-        return self.service.denormalize_rows(raw)
+        tr = self.tracer
+        root = None
+        if tr is not None:
+            ctx = tr.sample()          # head decision: 1 in sample_every
+            root = tr.start("client.predict_all", ctx,
+                            tags={"n_graphs": len(graphs)})
+        sub = root.ctx if root is not None else None
+        try:
+            if len(graphs) == 1:       # compiler hot path: one candidate
+                raw = self.submit(graphs[0], trace=sub).result(
+                    timeout=timeout)[None]
+            else:
+                futs = [self.submit(g, trace=sub) for g in graphs]
+                raw = np.stack([f.result(timeout=timeout) for f in futs])
+        except BaseException:
+            if tr is not None:
+                tr.end(root, status="err")
+            raise
+        if tr is not None:
+            tr.end(root)
+        out = self.service.denormalize_rows(raw)
+        drift = getattr(self.service, "drift", None)
+        if drift is not None:
+            drift.observe_batch(graphs, out)
+        return out
 
     def predict_graphs(self, graphs: Sequence[Graph],
                        target: Optional[str] = None) -> np.ndarray:

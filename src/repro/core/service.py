@@ -130,6 +130,9 @@ class CostModelService:
     _apply = None
 
     def __post_init__(self):
+        # optional repro.obs.drift.DriftMonitor bound via drift.attach();
+        # plain attribute so repro.core never imports the obs package
+        self.drift = None
         _, apply_fn, _ = CM.get_model(self.kind)
         if self.dtype not in ("f32", "bf16"):
             raise ValueError(f"dtype must be f32 or bf16, got "
@@ -647,6 +650,8 @@ class CostModelService:
             self.ingest_tokens += len(toks)
             self.ingest_oov_tokens += int(round(oov * len(toks)))
         self._phase_add("encode_s", time.perf_counter() - t0)
+        if self.drift is not None:     # vocab-drift EWMAs + alarms
+            self.drift.note_text(oov, unk)
         return FD.TextEntry(key=key, ids=ids, n_tokens=len(toks),
                             oov_rate=oov, unk_rate=unk,
                             dialects=res.dialects, n_ops=res.n_ops)
@@ -740,7 +745,10 @@ class CostModelService:
                 for (hh, _), p in zip(group, preds):
                     vals[hh] = p
         raw = np.stack([vals[k] for k in keys])  # (N, n_heads)
-        return self.denormalize_rows(raw)
+        out = self.denormalize_rows(raw)
+        if self.drift is not None:     # accuracy sentinel (O(1) sampling)
+            self.drift.observe_batch(graphs, out)
+        return out
 
     def resolve_target(self, target: Optional[str]) -> str:
         """Map a requested target onto this service's heads.

@@ -247,7 +247,7 @@ class TrainEngine:
                 on_step(step, dt)
 
         heads_extra = list(self.heads) if self.heads else [self.target]
-        t0 = time.time()
+        t0 = time.perf_counter()
         with mesh:
             state = sup.run(
                 state, step_fn, e.steps, start_step=start,
@@ -255,7 +255,7 @@ class TrainEngine:
                                   "norm_stats": norm_stats,
                                   "heads": heads_extra},
                 on_step=_on_step)
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         steps_run = max(e.steps - start, 0)
         # a resume that finds the run already complete executes 0 steps:
         # final_loss is then NaN (nothing ran) and steps_per_s 0 by design

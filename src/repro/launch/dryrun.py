@@ -100,7 +100,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
         record.update(status="skipped", reason=reason)
         return record
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     overrides = dict(rules_overrides or {})
@@ -160,9 +160,9 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
                 donate_argnums=(1,))
             lowered = jitted.lower(abs_params, abs_cache, specs["tokens"],
                                    jax.ShapeDtypeStruct((), jnp.int32))
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = _mem_summary(compiled)
     cost = _cost_summary(compiled)

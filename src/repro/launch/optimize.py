@@ -70,6 +70,18 @@ def main():
                     help="cost candidates through the fused Pallas "
                          "serving forward (repro.kernels.ops); composes "
                          "with --dtype bf16")
+    ap.add_argument("--obs", action="store_true",
+                    help="unified telemetry on the serving gateway: "
+                         "head-sampled tracing, metrics-registry JSONL "
+                         "stream, and the drift sentinel (see "
+                         "`python -m repro.launch.obs report`)")
+    ap.add_argument("--obs-jsonl", default="obs_optimize.jsonl",
+                    help="telemetry stream path for --obs")
+    ap.add_argument("--obs-sample", type=int, default=64,
+                    help="trace 1 in N predict_all calls")
+    ap.add_argument("--obs-prom-port", type=int, default=None,
+                    help="optional Prometheus /metrics port (0 = "
+                         "ephemeral)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -109,7 +121,13 @@ def main():
     backend = svc
     if not args.direct:
         server = CostModelServer(svc, max_batch=args.max_batch,
-                                 flush_us=args.flush_us).start()
+                                 flush_us=args.flush_us)
+    from repro.launch.serve import setup_obs, teardown_obs
+    obs = setup_obs(args, server=server, service=svc)
+    if obs and server is not None:
+        server.tracer = obs["tracer"]
+    if server is not None:
+        server.start()
         backend = server
     try:
         t0 = time.perf_counter()
@@ -122,6 +140,7 @@ def main():
         if server is not None:
             m = server.metrics.snapshot()
             server.stop()
+        teardown_obs(args, obs)
 
     for r in report["per_graph"]:
         arrow = "↓" if r["oracle_best"] < r["oracle_root"] else "="

@@ -110,6 +110,21 @@ def main():
                          "VMEM-carry recurrence kernel. Composes with "
                          "--dtype bf16 (bf16 params, f32 in-kernel "
                          "accumulation)")
+    ap.add_argument("--obs", action="store_true",
+                    help="unified telemetry: head-sampled request "
+                         "tracing (spans cross the replica wire), one "
+                         "metrics-registry JSONL stream, and the online "
+                         "accuracy/drift sentinel. Inspect with "
+                         "`python -m repro.launch.obs report <jsonl>`")
+    ap.add_argument("--obs-jsonl", default="obs_telemetry.jsonl",
+                    help="telemetry stream path (JSONL: interleaved "
+                         "metrics snapshots + span records)")
+    ap.add_argument("--obs-sample", type=int, default=16,
+                    help="trace 1 in N requests (errors/sheds are "
+                         "always traced)")
+    ap.add_argument("--obs-prom-port", type=int, default=None,
+                    help="also serve a Prometheus-style /metrics "
+                         "endpoint on this port (0 = ephemeral)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -138,14 +153,85 @@ def main():
     server = CostModelServer(svc, max_batch=args.max_batch,
                              flush_us=args.flush_us,
                              max_queue=args.max_queue)
+    obs = setup_obs(args, server=server, service=svc)
+    if obs:
+        server.tracer = obs["tracer"]
     t0 = time.perf_counter()
     server.start(warmup=not args.no_warmup)
     try:
         run_session(server, svc, args, time.perf_counter() - t0)
     finally:
         server.stop()                  # fail leftover futures on error
+        teardown_obs(args, obs)
     print(f"cache after session: {svc.cache_stats()['size']} unique "
           f"entries")
+
+
+def setup_obs(args, *, server=None, service=None, router=None,
+              shared_cache=None):
+    """Build the unified telemetry stack from CLI flags: one tracer,
+    one registry over every tier's existing stats source, the drift
+    sentinel on the (featurizer) service, and the JSONL exporter that
+    streams it all to disk. Returns the bundle, or None when --obs is
+    off — every call site is a no-op then."""
+    if not getattr(args, "obs", False):
+        return None
+    from repro.obs import (JsonlExporter, MetricsRegistry, PromExporter,
+                           Tracer, register_drift, register_router,
+                           register_server, register_service,
+                           register_shared_cache, register_tracer)
+    from repro.obs.drift import DriftMonitor, attach
+    tracer = Tracer(sample_every=max(1, args.obs_sample))
+    reg = MetricsRegistry()
+    drift = None
+    if service is not None:
+        drift = attach(service, DriftMonitor())
+        register_service(reg, service)
+        register_drift(reg, drift)
+    if server is not None:
+        register_server(reg, server)
+    if router is not None:
+        register_router(reg, router)
+    if shared_cache is not None:
+        register_shared_cache(reg, shared_cache)
+    register_tracer(reg, tracer)
+    exporter = JsonlExporter(args.obs_jsonl, reg, tracer=tracer,
+                             interval_s=0.5).start()
+    prom = None
+    if args.obs_prom_port is not None:
+        prom = PromExporter(reg, args.obs_prom_port).start()
+        print(f"obs: /metrics on port {prom.port}")
+    print(f"obs: tracing 1/{tracer.sample_every} requests "
+          f"-> {args.obs_jsonl}")
+    return {"tracer": tracer, "registry": reg, "drift": drift,
+            "exporter": exporter, "prom": prom}
+
+
+def teardown_obs(args, obs) -> None:
+    """Flush + stop the telemetry stack and print the trace digest the
+    session just produced (the same numbers `launch/obs.py report`
+    computes offline from the JSONL)."""
+    if not obs:
+        return
+    import json
+
+    from repro.obs import assemble, completeness
+    if obs["drift"] is not None:
+        obs["drift"].stop()            # drains + scores the queue
+    obs["exporter"].stop()             # final tick: snapshot + spans
+    if obs["prom"] is not None:
+        obs["prom"].stop()
+    spans = []
+    try:
+        with open(args.obs_jsonl, encoding="utf-8") as f:
+            spans = [json.loads(ln) for ln in f if '"kind": "span"' in ln]
+    except OSError:
+        pass
+    trees = assemble(spans)
+    if trees:
+        print(f"obs: {len(spans)} spans across {len(trees)} traces, "
+              f"completeness={completeness(trees):.1%}; inspect with "
+              f"`python -m repro.launch.obs report {args.obs_jsonl}`")
 
 
 def run_replicated(svc: CostModelService, args) -> None:
@@ -160,9 +246,15 @@ def run_replicated(svc: CostModelService, args) -> None:
                           warmup=not args.no_warmup,
                           max_batch=args.max_batch,
                           flush_us=args.flush_us,
-                          max_queue=args.max_queue)
+                          max_queue=args.max_queue,
+                          obs_trace=args.obs)
+    obs = None
     try:
         client = ReplicaClient(tier.client_handle(0))
+        obs = setup_obs(args, router=client, service=client.fsvc,
+                        shared_cache=tier.shared_cache)
+        if obs:
+            client.tracer = obs["tracer"]
         run_session(client, client.fsvc, args, time.perf_counter() - t0)
         for payload in client.replica_stats():
             if payload is None:
@@ -179,6 +271,7 @@ def run_replicated(svc: CostModelService, args) -> None:
               f"shed={client.shed_count}")
     finally:
         tier.stop()
+        teardown_obs(args, obs)
 
 
 def run_session(server: CostModelServer, svc: CostModelService, args,

@@ -1,0 +1,39 @@
+"""Unified observability for the serving stack.
+
+Three parts, all dependency-free (stdlib + the repo itself):
+
+* :mod:`repro.obs.trace` — head-sampled cross-process request tracing:
+  :class:`Tracer` / :class:`TraceRecorder` / :func:`assemble`. Trace
+  contexts ride the replicated tier's wire format, so one sampled
+  request reconstructs a single client -> router -> replica -> forward
+  span tree.
+* :mod:`repro.obs.registry` — one typed metrics registry
+  (:class:`MetricsRegistry`) with adapters over every existing
+  telemetry source (server metrics, service phase/cache stats, router
+  health, shared-cache occupancy, drift gauges), snapshotting to one
+  versioned schema.
+* :mod:`repro.obs.drift` — :class:`DriftMonitor`, the online accuracy
+  sentinel: sampled served predictions scored against the analyzer
+  oracle in the background, rolling per-target Spearman/MAE plus
+  OOV/unk hysteresis alarms.
+
+Egress lives in :mod:`repro.obs.export` (periodic JSONL stream +
+opt-in Prometheus text endpoint); ``launch/obs.py`` is the CLI over
+the stream. See ``docs/observability.md``.
+"""
+from repro.obs.drift import Alarm, DriftMonitor
+from repro.obs.export import JsonlExporter, PromExporter, to_prometheus
+from repro.obs.registry import (MetricsRegistry, register_drift,
+                                register_router, register_server,
+                                register_service, register_shared_cache,
+                                register_tracer)
+from repro.obs.trace import (Span, TraceContext, TraceRecorder, Tracer,
+                             TraceTree, assemble, completeness)
+
+__all__ = [
+    "Alarm", "DriftMonitor", "JsonlExporter", "MetricsRegistry",
+    "PromExporter", "Span", "TraceContext", "TraceRecorder", "Tracer",
+    "TraceTree", "assemble", "completeness", "register_drift",
+    "register_router", "register_server", "register_service",
+    "register_shared_cache", "register_tracer", "to_prometheus",
+]

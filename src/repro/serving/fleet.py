@@ -28,7 +28,18 @@ def fleet_worker_main(worker_id: int, handle, pool, client_kw,
     try:
         from repro.opt import search as OS
         from repro.serving.router import ReplicaClient
-        client = ReplicaClient(handle, **(client_kw or {}))
+        client_kw = dict(client_kw or {})
+        # obs passthrough: `obs_sample=N` (not a ReplicaClient kwarg)
+        # gives this worker's client its own head-sampling tracer;
+        # trace health then rides the normal stats reply
+        obs_sample = int(client_kw.pop("obs_sample", 0) or 0)
+        tracer = None
+        if obs_sample:
+            from repro.obs.trace import Tracer
+            tracer = Tracer(sample_every=obs_sample,
+                            proc=f"fleet-{worker_id}")
+            client_kw["tracer"] = tracer
+        client = ReplicaClient(handle, **client_kw)
     except Exception as e:
         res_q.put(("error", worker_id,
                    f"{e!r}\n{traceback.format_exc()}"))
@@ -63,6 +74,13 @@ def fleet_worker_main(worker_id: int, handle, pool, client_kw,
                 res_q.put(("clear", worker_id))
             elif tag == "stats":
                 payload = client.stats()
+                if tracer is not None:
+                    from repro.obs.trace import assemble, completeness
+                    recs = tracer.recorder.snapshot()
+                    trees = assemble(recs)
+                    payload["obs"] = {
+                        "spans": len(recs), "traces": len(trees),
+                        "complete_frac": completeness(trees)}
                 if msg[1]:                   # include replica-side stats
                     payload["replicas"] = client.replica_stats()
                 res_q.put(("stats", worker_id, payload))

@@ -93,7 +93,8 @@ def start_replicas(spec: T.ServiceSpec, n_replicas: int, *,
                    max_queue: int = 4096,
                    adaptive_flush: bool = True,
                    shared_slots: int = 16384,
-                   start_timeout_s: float = 180.0) -> ReplicaTier:
+                   start_timeout_s: float = 180.0,
+                   obs_trace: bool = False) -> ReplicaTier:
     """Spawn ``n_replicas`` model-serving processes + the shared cache.
 
     Blocks until every replica reports ready (model rebuilt, programs
@@ -109,7 +110,8 @@ def start_replicas(spec: T.ServiceSpec, n_replicas: int, *,
     client_queues = [ctx.Queue() for _ in range(n_clients)]
     ready = ctx.Queue()
     server_kw = dict(max_batch=max_batch, flush_us=flush_us,
-                     max_queue=max_queue, adaptive_flush=adaptive_flush)
+                     max_queue=max_queue, adaptive_flush=adaptive_flush,
+                     obs_trace=obs_trace)
     procs = []
     for i in range(n_replicas):
         p = ctx.Process(
@@ -145,9 +147,19 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
     try:
         from repro.core.server import (CostModelServer,
                                        ServerOverloadedError)
+        server_kw = dict(server_kw)
+        tracer = None
+        if server_kw.pop("obs_trace", False):
+            # replica-side tracer: never head-samples on its own (the
+            # client makes the head decision); it only honors contexts
+            # arriving on the wire, so sample_every is effectively off
+            from repro.obs.trace import TraceContext, Tracer
+            tracer = Tracer(sample_every=1 << 30,
+                            proc=f"replica-{replica_id}")
         svc = spec.build()
         server = CostModelServer(
-            svc, **{k: v for k, v in server_kw.items() if v is not None})
+            svc, tracer=tracer,
+            **{k: v for k, v in server_kw.items() if v is not None})
         server.start(warmup=warmup)
     except Exception as e:                       # startup failure: report
         ready.put(("error", f"{e!r}\n{traceback.format_exc()}"))
@@ -163,7 +175,8 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
         with send_lock:
             client_queues[client].put(msg)
 
-    def _handle_batch(client: int, batch_id: int, keys, lens_b, ids_b):
+    def _handle_batch(client: int, batch_id: int, keys, lens_b, ids_b,
+                      trace=None):
         nonlocal shared_hits, shared_misses
         entries = T.unpack_entries(keys, lens_b, ids_b)
         rids = list(range(len(entries)))
@@ -175,6 +188,12 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
         pend = {"n": 1, "done": False}
         pend_lock = threading.Lock()
         computed: List = []                      # -> shared tier
+        batch_span = None
+        if tracer is not None and trace is not None:
+            batch_span = tracer.start(
+                "replica.batch", TraceContext.from_wire(trace),
+                tags={"replica": replica_id, "n_entries": len(entries)})
+        sub_ctx = batch_span.ctx if batch_span is not None else None
 
         def _finish_if_complete():
             with pend_lock:
@@ -184,9 +203,24 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
             if computed:
                 shared.put_many(computed)
             ok = [i for i in rids if rows[i] is not None]
+            spans = None
+            if batch_span is not None:
+                # the batch span + every child this trace produced in
+                # this process ship back with the response; by the time
+                # a future callback lands here the server worker has
+                # already emitted its queue/forward spans (it resolves
+                # futures only after recording them)
+                tracer.end(batch_span,
+                           status="overload" if shed else "ok",
+                           n_ok=len(ok), n_shed=len(shed))
+                if ok:
+                    spans = tracer.recorder.take([batch_span.trace_id])
             if ok:
-                rows_b, nh = T.pack_rows([rows[i] for i in ok])
-                _send(client, (T.MSG_RES, batch_id, ok, rows_b, nh))
+                res = (T.MSG_RES, batch_id, ok,
+                       *T.pack_rows([rows[i] for i in ok]))
+                if spans:
+                    res = res + (spans,)
+                _send(client, res)
             if shed:
                 _send(client, (T.MSG_OVERLOAD, batch_id, shed,
                                retry_after))
@@ -194,17 +228,24 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
         for i, (key, ids) in enumerate(entries):
             hit = svc.cache_lookup(key)
             if hit is not None:
+                if sub_ctx is not None:
+                    tracer.emit("replica.cache_hit", sub_ctx, 0.0,
+                                tags={"tier": "local"})
                 rows[i] = hit
                 continue
             srow = shared.get(key)               # cross-replica tier
             if srow is not None:
                 shared_hits += 1
+                if sub_ctx is not None:
+                    tracer.emit("replica.cache_hit", sub_ctx, 0.0,
+                                tags={"tier": "shared"})
                 svc.import_cache([(key, srow)])
                 rows[i] = srow
                 continue
             shared_misses += 1
             try:
-                fut = server.submit_entry(key, ids, probe=False)
+                fut = server.submit_entry(key, ids, probe=False,
+                                          trace=sub_ctx)
             except ServerOverloadedError as e:
                 shed.append(i)
                 retry_after = max(retry_after, e.retry_after_s)
@@ -234,9 +275,13 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
         if tag == T.MSG_STOP:
             break
         if tag == T.MSG_REQ:
-            _, client, batch_id, keys, lens_b, ids_b = msg
+            # length-tolerant: traced requests carry an optional 7th
+            # element (see transport docstring); classic 6-tuples are
+            # untraced
+            _, client, batch_id, keys, lens_b, ids_b = msg[:6]
             try:
-                _handle_batch(client, batch_id, keys, lens_b, ids_b)
+                _handle_batch(client, batch_id, keys, lens_b, ids_b,
+                              trace=T.req_trace(msg))
             except Exception as e:               # never kill the replica
                 _send(client, (T.MSG_ERR, batch_id,
                                list(range(len(keys))), repr(e)))
@@ -248,6 +293,10 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
                        "cache": svc.cache_stats(),
                        "shared_hits": shared_hits,
                        "shared_misses": shared_misses}
+            if tracer is not None:
+                payload["obs"] = {
+                    "spans_buffered": len(tracer.recorder),
+                    "spans_dropped": tracer.recorder.dropped}
             _send(client, (T.MSG_STATS_RES, rid, payload))
         elif tag == T.MSG_CLEAR:
             _, client, rid = msg

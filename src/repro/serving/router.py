@@ -141,7 +141,13 @@ class _Health:
                                    time.monotonic() + w)
 
     def as_dict(self) -> Dict[str, float]:
-        return {k: getattr(self, k) for k in self.__slots__}
+        d = {k: getattr(self, k) for k in self.__slots__}
+        # how much cooldown is actually left NOW (0 when healthy) —
+        # `unhealthy_until` alone is a raw monotonic stamp, useless to
+        # a dashboard on its own
+        d["cooldown_remaining_s"] = max(
+            0.0, self.unhealthy_until - time.monotonic())
+        return d
 
 
 class ReplicaClient:
@@ -151,10 +157,15 @@ class ReplicaClient:
                  *, transport=None, local_cache: bool = True,
                  vnodes: int = 32, max_retries: int = 4,
                  backoff_s: float = 0.005, backoff_mult: float = 2.0,
-                 timeout_s: float = 60.0, cooldown_s: float = 0.05):
+                 timeout_s: float = 60.0, cooldown_s: float = 0.05,
+                 tracer=None):
         if transport is None:
             transport = QueueTransport(handle)
         self.transport = transport
+        # optional repro.obs.trace.Tracer: head-samples requests here at
+        # the tier's front door and imports replica-side spans shipped
+        # back on MSG_RES, so one client recorder holds complete trees
+        self.tracer = tracer
         self.client_id = getattr(transport, "client_id", 0)
         self.ring = HashRing(transport.n_replicas, vnodes=vnodes)
         self.local_cache = local_cache
@@ -196,28 +207,51 @@ class ReplicaClient:
     def predict_all(self, graphs) -> Dict[str, np.ndarray]:
         if not len(graphs):
             return {t: np.zeros((0,), np.float32) for t in self.heads}
-        keys: List[str] = []
-        vals: Dict[str, np.ndarray] = {}
-        miss_graphs: Dict[str, Any] = {}
-        for g in graphs:
-            h = self.fsvc.key_of(g)
-            keys.append(h)
-            if h in vals or h in miss_graphs:
-                continue
-            hit = self.fsvc.cache_lookup(h) if self.local_cache else None
-            if hit is not None:
-                vals[h] = hit
-            else:
-                miss_graphs[h] = g
-        if miss_graphs:
+        tr = self.tracer
+        root = None
+        if tr is not None:             # head decision for this request
+            root = tr.start("client.predict_all", tr.sample(),
+                            tags={"n_graphs": len(graphs)})
+        sub = root.ctx if root is not None else None
+        try:
+            feat = tr.start("client.featurize", sub) if tr else None
+            keys: List[str] = []
+            vals: Dict[str, np.ndarray] = {}
+            miss_graphs: Dict[str, Any] = {}
+            for g in graphs:
+                h = self.fsvc.key_of(g)
+                keys.append(h)
+                if h in vals or h in miss_graphs:
+                    continue
+                hit = self.fsvc.cache_lookup(h) if self.local_cache \
+                    else None
+                if hit is not None:
+                    vals[h] = hit
+                else:
+                    miss_graphs[h] = g
             entries = self.fsvc.entries_for(
-                list(miss_graphs.values()), list(miss_graphs))
-            fetched = self._fetch(entries)
-            vals.update(fetched)
-            if self.local_cache:
-                self.fsvc.import_cache(list(fetched.items()))
+                list(miss_graphs.values()), list(miss_graphs)) \
+                if miss_graphs else []
+            if tr is not None:
+                tr.end(feat, n_miss=len(miss_graphs),
+                       local_hits=len(vals))
+            if entries:
+                fetched = self._fetch(entries, trace=sub)
+                vals.update(fetched)
+                if self.local_cache:
+                    self.fsvc.import_cache(list(fetched.items()))
+        except BaseException:
+            if tr is not None:
+                tr.end(root, status="err")
+            raise
+        if tr is not None:
+            tr.end(root)
         raw = np.stack([vals[k] for k in keys])
-        return self.fsvc.denormalize_rows(raw)
+        out = self.fsvc.denormalize_rows(raw)
+        drift = getattr(self.fsvc, "drift", None)
+        if drift is not None:          # accuracy sentinel rides the tier
+            drift.observe_batch(graphs, out)
+        return out
 
     def predict_graphs(self, graphs, target: Optional[str] = None
                        ) -> np.ndarray:
@@ -269,26 +303,37 @@ class ReplicaClient:
                 return r
         return order[0]
 
-    def _fetch(self, entries: Sequence[Tuple[str, np.ndarray]]
-               ) -> Dict[str, np.ndarray]:
+    def _fetch(self, entries: Sequence[Tuple[str, np.ndarray]],
+               trace=None) -> Dict[str, np.ndarray]:
         """Resolve (key, ids) misses through the tier, with retry,
         reroute-on-failure, backoff, and final shed."""
+        tr = self.tracer
+        span = tr.start("router.fetch", trace,
+                        tags={"n_entries": len(entries)}) if tr else None
+        sub = span.ctx if span is not None else None
         pending: Dict[str, np.ndarray] = dict(entries)
         got: Dict[str, np.ndarray] = {}
         delay = self.backoff_s
         for attempt in range(self.max_retries + 1):
             if not pending:
                 break
-            hint = self._round(pending, got)
+            hint = self._round(pending, got, trace=sub)
             if pending and attempt < self.max_retries:
                 time.sleep(max(hint, delay))
                 delay *= self.backoff_mult
         if pending:
             self.shed_count += 1
+            if tr is not None:          # sheds are always-on telemetry
+                tr.error_span("router.shed", sub,
+                              n_pending=len(pending),
+                              attempts=self.max_retries + 1)
+                tr.end(span, status="shed", attempts=attempt + 1)
             raise ServerOverloadedError(
                 f"{len(pending)} request(s) shed after "
                 f"{self.max_retries + 1} attempts across "
                 f"{self.ring.n_replicas} replicas")
+        if tr is not None:
+            tr.end(span, attempts=attempt + 1)
         return got
 
     def _recv_any(self, bids, deadline: float):
@@ -347,27 +392,40 @@ class ReplicaClient:
                 self._mail.pop(bid, None)
 
     def _round(self, pending: Dict[str, np.ndarray],
-               got: Dict[str, np.ndarray]) -> float:
+               got: Dict[str, np.ndarray], trace=None) -> float:
         """One routed send/collect round. Resolved keys move from
-        ``pending`` to ``got``; returns the max retry_after hint."""
+        ``pending`` to ``got``; returns the max retry_after hint.
+
+        When traced, each per-replica wire batch gets its own
+        ``router.rpc`` span (retries create new ones under the same
+        trace, so the tree shows every attempt); the trace context rides
+        MSG_REQ as an optional 7th element — appended ONLY for traced
+        sends, so untraced traffic keeps the classic 6-tuple shape."""
+        tr = self.tracer
         now = time.monotonic()
         groups: Dict[int, List[Tuple[str, np.ndarray]]] = {}
         for key, ids in pending.items():
             groups.setdefault(self._pick_replica(key, now), []).append(
                 (key, ids))
-        outstanding: Dict[int, Tuple[int, List[str]]] = {}
+        outstanding: Dict[int, Tuple[int, List[str], Any]] = {}
         for replica, ents in groups.items():
             bid = self._next_batch_id()
             ks, lens_b, ids_b = T.pack_entries(ents)
+            sp = tr.start("router.rpc", trace,
+                          tags={"replica": replica, "n_keys": len(ks)}) \
+                if tr is not None and trace is not None else None
+            msg = (T.MSG_REQ, self.client_id, bid, ks, lens_b, ids_b)
+            if sp is not None:
+                msg = msg + (sp.ctx.to_wire(),)
             try:
-                self.transport.send(
-                    replica,
-                    (T.MSG_REQ, self.client_id, bid, ks, lens_b, ids_b))
+                self.transport.send(replica, msg)
                 self.health[replica].sent += 1
-                outstanding[bid] = (replica, ks)
+                outstanding[bid] = (replica, ks, sp)
             except Exception:
                 self.health[replica].note_failure(
                     "err", self.cooldown_s)
+                if tr is not None:
+                    tr.end(sp, status="err", stage="send")
         hint = 0.0
         deadline = time.monotonic() + self.timeout_s
         tracked = set(outstanding)
@@ -376,14 +434,19 @@ class ReplicaClient:
             while outstanding:
                 msg = self._recv_any(set(outstanding), deadline)
                 if msg is None:             # deadline: everything left
-                    for bid, (replica, ks) in outstanding.items():
+                    for bid, (replica, ks, sp) in outstanding.items():
                         self.health[replica].note_failure(
                             "timeout", self.cooldown_s)
+                        if tr is not None:
+                            tr.end(sp, status="timeout")
                     break
                 tag = msg[0]
                 if tag == T.MSG_RES:
-                    _, bid, rids, rows_b, nh = msg
-                    replica, ks = outstanding[bid]
+                    bid, rids, rows_b, nh = msg[1], msg[2], msg[3], msg[4]
+                    spans = T.res_spans(msg)
+                    if spans and tr is not None:
+                        tr.recorder.extend(spans)   # replica-side spans
+                    replica, ks, sp = outstanding[bid]
                     rows = T.unpack_rows(rows_b, nh)
                     for rid, row in zip(rids, rows):
                         key = ks[rid]
@@ -392,18 +455,25 @@ class ReplicaClient:
                     self.health[replica].note_ok()
                     if not any(k in pending for k in ks):
                         outstanding.pop(bid, None)
+                        if tr is not None:
+                            tr.end(sp, n_rows=len(rids))
                 elif tag == T.MSG_OVERLOAD:
                     _, bid, rids, retry_after = msg
-                    replica, ks = outstanding.pop(bid)
+                    replica, ks, sp = outstanding.pop(bid)
                     hint = max(hint, float(retry_after))
                     self.health[replica].note_failure(
                         "overload", self.cooldown_s,
                         retry_after_s=float(retry_after))
+                    if tr is not None:
+                        tr.end(sp, status="overload",
+                               retry_after_s=float(retry_after))
                 elif tag == T.MSG_ERR:
                     _, bid, rids, why = msg
-                    replica, ks = outstanding.pop(bid)
+                    replica, ks, sp = outstanding.pop(bid)
                     self.health[replica].note_failure(
                         "err", self.cooldown_s)
+                    if tr is not None:
+                        tr.end(sp, status="err")
         finally:
             self._untrack(tracked)
         return hint
@@ -451,6 +521,7 @@ class ReplicaClient:
             self._rpc(T.MSG_CLEAR)
 
     def stats(self) -> Dict[str, Any]:
+        now = time.monotonic()
         return {
             "client_id": self.client_id,
             "n_replicas": self.ring.n_replicas,
@@ -458,6 +529,14 @@ class ReplicaClient:
             "local_cache": self.fsvc.cache_stats(),
             "health": {r: h.as_dict()
                        for r, h in enumerate(self.health)},
+            # fleet-level rollups: per-kind failure totals and how many
+            # replicas are in cooldown right now — the one-look summary
+            # the registry snapshot and dashboards key on
+            "failures": {k: sum(getattr(h, k) for h in self.health)
+                         for k in ("overload", "err", "timeout",
+                                   "reroutes")},
+            "unhealthy_now": sum(h.unhealthy_until > now
+                                 for h in self.health),
         }
 
 

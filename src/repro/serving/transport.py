@@ -17,13 +17,21 @@ mid-session), so everything crossing the boundary is defined here:
 
 Message tuples (first element is the type tag):
 
-  ``(MSG_REQ, client_id, batch_id, keys, lens_b, ids_b)``  router->replica
-  ``(MSG_RES, batch_id, rids, rows_b, n_heads)``           replica->router
-  ``(MSG_OVERLOAD, batch_id, rids, retry_after_s)``        replica->router
-  ``(MSG_ERR, batch_id, rids, repr)``                      replica->router
+  ``(MSG_REQ, client_id, batch_id, keys, lens_b, ids_b[, trace])``
+  router->replica; ``(MSG_RES, batch_id, rids, rows_b, n_heads[, spans])``
+  replica->router; ``(MSG_OVERLOAD, batch_id, rids, retry_after_s)``
+  replica->router; ``(MSG_ERR, batch_id, rids, repr)``    replica->router
   ``(MSG_STATS, client_id, rid)`` / ``(MSG_STATS_RES, rid, payload)``
   ``(MSG_CLEAR, client_id, rid)`` — drop replica caches (bench cold runs)
   ``(MSG_STOP,)``
+
+Tracing rides the wire as *optional trailing elements* — requests the
+client head-sampled append a 7th element ``trace = (trace_id,
+parent_span_id)`` to MSG_REQ, and the replica ships that trace's span
+records back as a 6th MSG_RES element. Untraced traffic keeps the
+original tuple arity, so both sides unpack length-tolerantly
+(:func:`req_trace` / :func:`res_spans`) and old-shaped messages remain
+valid forever.
 """
 from __future__ import annotations
 
@@ -40,6 +48,16 @@ MSG_STATS = "stats"
 MSG_STATS_RES = "stats_res"
 MSG_CLEAR = "clear"
 MSG_STOP = "stop"
+
+
+def req_trace(msg) -> Optional[Tuple[str, str]]:
+    """Optional trace context on a MSG_REQ tuple (None when untraced)."""
+    return msg[6] if len(msg) > 6 else None
+
+
+def res_spans(msg) -> Optional[list]:
+    """Optional span records riding a MSG_RES tuple."""
+    return msg[5] if len(msg) > 5 else None
 
 
 @dataclass

@@ -1,0 +1,503 @@
+"""Unified telemetry layer: trace primitives (sampling, span trees,
+bounded recorder, wire context), the metrics registry + exporters, the
+drift sentinel, and the tracing woven through the serving tiers — the
+router state machine driven through a trace-tolerant fake transport
+(retry / failover / shed keep one trace id), plus a live 2-replica
+tier asserting that sampled requests reconstruct complete span trees
+across process boundaries."""
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.costmodel import CostModelConfig
+from repro.core import models as CM
+from repro.core import tokenizer as TOK
+from repro.core.server import CostModelServer, ServerOverloadedError
+from repro.core.service import CostModelService
+from repro.ir import samplers
+from repro.obs import (JsonlExporter, MetricsRegistry, TraceContext,
+                       Tracer, assemble, completeness, register_drift,
+                       register_server, to_prometheus)
+from repro.obs.drift import Alarm, DriftMonitor, attach
+from repro.obs.trace import TraceRecorder, _new_id
+from repro.serving import ReplicaClient, ServiceSpec, start_replicas
+from repro.serving import transport as T
+
+CFG = CostModelConfig(name="obs-test", vocab_size=512, max_seq=64,
+                      embed_dim=16, conv_channels=(16,) * 2,
+                      fc_dims=(32,))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(7)
+    graphs = [samplers.sample_graph(rng) for _ in range(24)]
+    vocab = TOK.fit_vocab([TOK.graph_tokens(g, "ops") for g in graphs],
+                          max_size=512)
+    return graphs, vocab
+
+
+@pytest.fixture(scope="module")
+def service(corpus):
+    _, vocab = corpus
+    params = CM.conv_init(jax.random.PRNGKey(5), CFG,
+                          heads=CM.DEFAULT_HEADS)
+    stats = {t: {"mu": 0.3, "sigma": 1.7} for t in CM.DEFAULT_HEADS}
+    return CostModelService("conv1d", CFG, params, vocab, stats,
+                            mode="ops", max_seq=64, max_batch=8,
+                            buckets=(32, 64), batch_ladder=(1, 2, 4, 8))
+
+
+@pytest.fixture(scope="module")
+def spec(service):
+    return ServiceSpec.from_service(service)
+
+
+# --------------------------------------------------- trace primitives
+def test_new_ids_unique():
+    ids = {_new_id() for _ in range(4096)}
+    assert len(ids) == 4096
+
+
+def test_trace_context_wire_roundtrip():
+    ctx = TraceContext("t1", "s1")
+    back = TraceContext.from_wire(ctx.to_wire())
+    assert (back.trace_id, back.span_id) == ("t1", "s1")
+    assert TraceContext.from_wire(None) is None
+    assert TraceContext.from_wire(()) is None
+
+
+def test_tracer_head_sampling_rate():
+    tr = Tracer(sample_every=4)
+    hits = [tr.sample() for _ in range(100)]
+    assert sum(c is not None for c in hits) == 25
+    assert all(tr.sample(force=True) is not None for _ in range(3))
+
+
+def test_span_tree_assembly_walk_and_completeness():
+    tr = Tracer(sample_every=1, proc="t")
+    ctx = tr.sample()
+    root = tr.start("root", ctx)
+    with tr.span("child-a", root.ctx) as a:
+        tr.emit("grandchild", a.ctx, 0.001)
+    tr.end(root, n=1)
+    trees = assemble(tr.recorder.snapshot())
+    assert len(trees) == 1
+    tree = trees[root.trace_id]
+    assert tree.complete
+    assert completeness(trees) == 1.0
+    names = [(d, s["name"]) for d, s in tree.walk()]
+    assert names == [(0, "root"), (1, "child-a"), (2, "grandchild")]
+    # an orphan (parent id that never lands) breaks completeness
+    tr.emit("stray", TraceContext(root.trace_id, "no-such-span"), 0.0)
+    trees = assemble(tr.recorder.snapshot())
+    assert not trees[root.trace_id].complete
+    assert completeness(trees) == 0.0
+
+
+def test_error_span_is_always_on():
+    tr = Tracer(sample_every=1 << 30)      # nothing head-samples
+    assert tr.sample() is None
+    ctx = tr.error_span("server.shed", None, pending=3)
+    recs = tr.recorder.snapshot()
+    assert len(recs) == 1
+    assert recs[0]["status"] == "err"
+    assert recs[0]["tags"]["forced"] == 1
+    assert recs[0]["trace"] == ctx.trace_id
+
+
+def test_recorder_bounded_and_take():
+    rec = TraceRecorder(capacity=4)
+    for i in range(6):
+        rec.record_raw({"trace": f"t{i % 2}", "span": f"s{i}",
+                        "parent": "", "name": "x", "proc": "p",
+                        "t_wall": 0.0, "dur_s": 0.0, "status": "ok",
+                        "tags": {}})
+    assert len(rec) == 4
+    assert rec.dropped == 2
+    taken = rec.take(["t0"])
+    assert all(r["trace"] == "t0" for r in taken)
+    assert all(r["trace"] == "t1" for r in rec.snapshot())
+    assert rec.take([]) == []
+
+
+# ------------------------------------------------------------ registry
+def test_registry_instruments_sources_and_schema():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc(3)
+    reg.gauge("depth").set(1.5)
+    h = reg.histogram("lat")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    reg.add_source("svc", lambda: {"a": 1, "nested": {"b": 2.5},
+                                   "flag": True, "skip": "string"})
+    snap = reg.snapshot()
+    assert snap["schema"] == "repro.obs/v1"
+    m = snap["metrics"]
+    assert m["reqs"] == 3 and m["depth"] == 1.5
+    assert m["lat.count"] == 3.0 and m["lat.mean"] == 2.0
+    assert m["svc.a"] == 1 and m["svc.nested.b"] == 2.5
+    assert m["svc.flag"] == 1 and "svc.skip" not in m
+    assert snap["seq"] + 1 == reg.snapshot()["seq"]
+
+
+def test_registry_source_failure_never_raises():
+    reg = MetricsRegistry()
+
+    def bad():
+        raise RuntimeError("source down")
+
+    reg.add_source("bad", bad)
+    reg.add_source("ok", lambda: {"x": 1})
+    snap = reg.snapshot()
+    assert snap["metrics"]["ok.x"] == 1
+    assert snap["metrics"]["obs.source_errors"] == 1
+    # same-prefix re-registration replaces, not duplicates
+    reg.add_source("bad", lambda: {"y": 2})
+    snap = reg.snapshot()
+    assert snap["metrics"]["bad.y"] == 2
+    assert snap["metrics"]["obs.source_errors"] == 1
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("server.requests").inc(7)
+    reg.gauge("drift.oov_rate").set(0.125)
+    text = to_prometheus(reg.snapshot())
+    assert "server_requests 7\n" in text
+    assert "drift_oov_rate 0.125\n" in text
+    assert text.rstrip().endswith("obs_snapshot_seq 1")
+
+
+def test_jsonl_exporter_writes_metrics_and_spans(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("n").inc()
+    tr = Tracer(sample_every=1)
+    with tr.span("op", tr.sample()):
+        pass
+    path = str(tmp_path / "obs.jsonl")
+    exp = JsonlExporter(path, reg, tracer=tr, interval_s=60.0)
+    exp.tick()
+    kinds = [json.loads(line)["kind"]
+             for line in open(path) if line.strip()]
+    assert kinds.count("metrics") == 1
+    assert kinds.count("span") == 1
+    assert len(tr.recorder) == 0           # tick drains the ring
+    assert exp.lines_written == 2
+
+
+# --------------------------------------------------------------- drift
+def test_alarm_hysteresis_never_flaps_in_band():
+    a = Alarm(hi=0.25, lo=0.10)
+    assert not a.update(0.2)               # below hi: stays off
+    assert a.update(0.3)                   # arms
+    assert a.update(0.15)                  # in band: stays ARMED
+    assert not a.update(0.05)              # disarms only under lo
+    assert not a.update(0.2)
+
+
+def test_drift_monitor_scores_and_gauges():
+    def oracle(g):
+        return {"latency_us": 10.0 * g}
+
+    mon = DriftMonitor(oracle, targets=("latency_us",), sample_every=1,
+                       score_interval_s=0.0)
+    # gauges are fully populated BEFORE any traffic
+    g0 = mon.gauges()
+    assert g0["spearman.latency_us"] == 0.0
+    assert g0["window_n.latency_us"] == 0
+    assert g0["oov_rate"] == 0.0 and g0["oov_alarm"] == 0
+    graphs = list(range(1, 9))
+    preds = {"latency_us": np.array([10.0 * g + 0.5 for g in graphs])}
+    mon.observe_batch(graphs, preds)
+    mon.flush()
+    g1 = mon.gauges()
+    assert g1["observed"] == 8 and g1["scored"] == 8
+    assert g1["window_n.latency_us"] == 8
+    assert g1["spearman.latency_us"] == pytest.approx(1.0)
+    assert g1["mae.latency_us"] == pytest.approx(0.5)
+
+
+def test_drift_note_text_feeds_ewma_alarms():
+    mon = DriftMonitor(lambda g: {}, oov_alarm=(0.5, 0.2),
+                       unk_alarm=(0.5, 0.2), ewma_alpha=1.0)
+    mon.note_text(0.6, 0.0)
+    g = mon.gauges()
+    assert g["oov_alarm"] == 1 and g["unk_alarm"] == 0
+    mon.note_text(0.1, 0.0)
+    assert mon.gauges()["oov_alarm"] == 0
+
+
+def test_drift_attach_wires_service_hook(service):
+    mon = attach(service, DriftMonitor(
+        lambda g: {}, sample_every=1, score_interval_s=0.0))
+    try:
+        assert service.drift is mon
+        assert mon.targets == tuple(service.heads)
+        rng = np.random.default_rng(3)
+        service.predict_all([samplers.sample_graph(rng)])
+        assert mon.observed == 1
+    finally:
+        mon.stop()
+        service.drift = None
+
+
+# ------------------------------------------- in-process traced gateway
+def test_server_predict_all_builds_complete_tree(corpus, service):
+    graphs, _ = corpus
+    tracer = Tracer(sample_every=1, proc="gw")
+    server = CostModelServer(service, max_batch=8, flush_us=300.0,
+                             tracer=tracer)
+    server.start(warmup=False)
+    try:
+        with service._cache_lock:
+            service._cache.clear()
+        server.predict_all(graphs[:6])
+    finally:
+        server.stop()
+    trees = assemble(tracer.recorder.snapshot())
+    assert len(trees) == 1
+    tree = next(iter(trees.values()))
+    assert tree.complete
+    names = {s["name"] for s in tree.spans}
+    assert {"client.predict_all", "server.queue",
+            "server.forward"} <= names
+    root = tree.roots[0]
+    assert root["name"] == "client.predict_all"
+    assert root["tags"]["n_graphs"] == 6
+
+
+def test_registry_adapts_live_server(corpus, service):
+    graphs, _ = corpus
+    server = CostModelServer(service, max_batch=8, flush_us=300.0)
+    server.start(warmup=False)
+    reg = MetricsRegistry()
+    register_server(reg, server)
+    mon = DriftMonitor(lambda g: {}, targets=tuple(service.heads))
+    register_drift(reg, mon)
+    try:
+        server.predict_all(graphs[:4])
+        m = reg.snapshot()["metrics"]
+        assert m["server.requests"] >= 4
+        for t in service.heads:
+            assert f"drift.spearman.{t}" in m
+        assert "drift.oov_rate" in m
+    finally:
+        server.stop()
+
+
+# ------------------------------- traced router over a fake transport
+def _row_for(key, n_heads=3):
+    h = int(key[:8], 16) if len(key) == 40 else abs(hash(key))
+    return (np.arange(n_heads, dtype=np.float32) + h % 97) / 97.0
+
+
+class TracedFakeTransport:
+    """Like test_replicated's FakeTransport, but trace-aware: tolerant
+    of the optional 7th MSG_REQ element, and for traced requests it
+    ships back a synthesized replica-side span on MSG_RES — the shape
+    a real replica produces."""
+
+    def __init__(self, n_replicas, behavior, n_heads=3):
+        import queue as _q
+        self.n_replicas = n_replicas
+        self.client_id = 0
+        self.behavior = behavior
+        self.n_heads = n_heads
+        self.q = _q.Queue()
+        self.sent = []                 # (replica, keys, trace_or_None)
+
+    def send(self, replica, msg):
+        if msg[0] != T.MSG_REQ:
+            return
+        _, _client, bid, keys, _lens, _ids = msg[:6]
+        wire = T.req_trace(msg)
+        self.sent.append((replica, list(keys), wire))
+        act = self.behavior(replica, keys)
+        if act[0] == "ok":
+            rows_b, nh = T.pack_rows(
+                [_row_for(k, self.n_heads) for k in keys])
+            res = (T.MSG_RES, bid, list(range(len(keys))), rows_b, nh)
+            if wire is not None:
+                res = res + ([{
+                    "trace": wire[0], "span": f"fake-{bid}",
+                    "parent": wire[1], "name": "replica.batch",
+                    "proc": "fake-replica", "t_wall": time.time(),
+                    "dur_s": 0.001, "status": "ok", "tags": {}}],)
+            self.q.put(res)
+        elif act[0] == "overload":
+            self.q.put((T.MSG_OVERLOAD, bid, list(range(len(keys))),
+                        act[1]))
+        elif act[0] == "err":
+            self.q.put((T.MSG_ERR, bid, list(range(len(keys))),
+                        "scripted failure"))
+        # "drop": no reply (dead replica)
+
+    def recv(self, timeout):
+        import queue as _q
+        try:
+            return self.q.get(timeout=timeout)
+        except _q.Empty:
+            raise
+
+
+@pytest.fixture()
+def traced_client(spec):
+    def make(behavior, **kw):
+        tr = TracedFakeTransport(4, behavior)
+        kw.setdefault("backoff_s", 0.001)
+        kw.setdefault("timeout_s", 0.25)
+        kw.setdefault("cooldown_s", 0.02)
+        kw.setdefault("local_cache", False)
+        tracer = Tracer(sample_every=1, proc="client")
+        return ReplicaClient(transport=tr, spec=spec, tracer=tracer,
+                             **kw), tr, tracer
+    return make
+
+
+def test_router_traced_request_tree_spans_processes(corpus,
+                                                    traced_client):
+    graphs, _ = corpus
+    client, tr, tracer = traced_client(lambda r, ks: ("ok",))
+    client.predict_all(graphs[:4])
+    trees = assemble(tracer.recorder.snapshot())
+    assert len(trees) == 1
+    tree = next(iter(trees.values()))
+    assert tree.complete
+    names = {s["name"] for s in tree.spans}
+    assert {"client.predict_all", "client.featurize", "router.fetch",
+            "router.rpc", "replica.batch"} <= names
+    assert "fake-replica" in tree.procs    # wire-imported spans
+    # every traced wire request carried the (trace_id, span_id) pair
+    assert all(w is not None and w[0] == tree.trace_id
+               for _, _, w in tr.sent)
+
+
+def test_untraced_requests_keep_classic_wire_shape(corpus, spec):
+    graphs, _ = corpus
+    tr = TracedFakeTransport(4, lambda r, ks: ("ok",))
+    client = ReplicaClient(transport=tr, spec=spec, local_cache=False,
+                           backoff_s=0.001, timeout_s=0.25)
+    client.predict_all(graphs[:4])
+    assert tr.sent and all(w is None for _, _, w in tr.sent)
+
+
+def test_trace_id_survives_retry_and_failover(corpus, traced_client):
+    graphs, _ = corpus
+    state = {"n": 0}
+
+    def flaky(r, ks):
+        state["n"] += 1
+        return ("overload", 0.001) if state["n"] == 1 else ("ok",)
+
+    client, tr, tracer = traced_client(flaky)
+    client.predict_all(graphs[:3])
+    trees = assemble(tracer.recorder.snapshot())
+    assert len(trees) == 1
+    tree = next(iter(trees.values()))
+    assert tree.complete
+    rpcs = [s for s in tree.spans if s["name"] == "router.rpc"]
+    assert len(rpcs) >= 2                  # first attempt + the retry
+    assert {s["status"] for s in rpcs} == {"overload", "ok"}
+    assert len({s["trace"] for s in rpcs}) == 1
+
+
+def test_shed_emits_error_span_under_the_same_trace(corpus,
+                                                    traced_client):
+    graphs, _ = corpus
+    client, tr, tracer = traced_client(
+        lambda r, ks: ("overload", 0.001), max_retries=1)
+    with pytest.raises(ServerOverloadedError):
+        client.predict_all(graphs[:2])
+    trees = assemble(tracer.recorder.snapshot())
+    assert len(trees) == 1
+    tree = next(iter(trees.values()))
+    assert tree.complete                   # even the failure tree stitches
+    by_name = {s["name"]: s for s in tree.spans}
+    assert by_name["router.shed"]["status"] == "err"
+    assert by_name["router.fetch"]["status"] == "shed"
+    assert by_name["client.predict_all"]["status"] == "err"
+
+
+# ------------------------------------------------- live 2-replica tier
+@pytest.fixture(scope="module")
+def traced_tier(spec):
+    tier = start_replicas(spec, 2, n_clients=1, flush_us=300.0,
+                          start_timeout_s=240.0, obs_trace=True)
+    yield tier
+    tier.stop()
+
+
+def test_live_tier_span_trees_complete_across_processes(corpus, spec,
+                                                        traced_tier):
+    """Acceptance: >= 99% of sampled requests through a real spawned
+    tier reconstruct COMPLETE span trees client-side — every replica
+    span shipped back over the wire and parented onto the client's
+    tree. Runs a cold pass (forward-pass spans) and a warm pass
+    (replica-LRU hit spans): both must stitch."""
+    graphs, _ = corpus
+    tracer = Tracer(sample_every=1, proc="client")
+    client = ReplicaClient(traced_tier.client_handle(0),
+                           local_cache=False, tracer=tracer)
+    client.clear_caches()
+    for g in graphs:                       # cold: replicas compute
+        client.predict_all([g])
+    for g in graphs[:8]:                   # warm: replica-LRU hits
+        client.predict_all([g])
+    trees = assemble(tracer.recorder.snapshot())
+    assert len(trees) == len(graphs) + 8
+    assert completeness(trees) >= 0.99
+    assert client.shed_count == 0
+    # trace ids crossed the process boundary: replica procs appear in
+    # (at least) every cold tree, parented under the client's rpc span
+    replica_procs = {p for t in trees.values() for p in t.procs
+                     if p.startswith("replica-")}
+    assert replica_procs                   # spans came back over MSG_RES
+    n_with_replica = sum(
+        any(p.startswith("replica-") for p in t.procs)
+        for t in trees.values())
+    assert n_with_replica == len(trees)
+    names = {s["name"] for t in trees.values() for s in t.spans}
+    assert {"client.predict_all", "router.rpc", "replica.batch",
+            "server.queue", "server.forward"} <= names
+
+
+def test_live_tier_stats_expose_obs_and_cooldown(corpus, traced_tier):
+    graphs, _ = corpus
+    client = ReplicaClient(traced_tier.client_handle(0),
+                           local_cache=False)
+    client.predict_all(graphs[:4])
+    st = client.stats()
+    assert "cooldown_remaining_s" in st["health"][0]
+    assert st["failures"]["overload"] == 0
+    assert st["unhealthy_now"] == 0
+    rstats = [s for s in client.replica_stats() if s]
+    assert rstats and all("obs" in s for s in rstats)
+    assert all(s["obs"]["spans_dropped"] == 0 for s in rstats)
+
+
+# ----------------------------------------------------------- obs CLI
+def test_obs_cli_report_reconstructs_jsonl(tmp_path, capsys):
+    from repro.launch import obs as OBS
+    tr = Tracer(sample_every=1, proc="cli")
+    ctx = tr.sample()
+    root = tr.start("client.predict_all", ctx)
+    with tr.span("router.fetch", root.ctx):
+        time.sleep(0.001)
+    tr.end(root)
+    reg = MetricsRegistry()
+    reg.gauge("drift.oov_rate").set(0.0)
+    path = str(tmp_path / "t.jsonl")
+    JsonlExporter(path, reg, tracer=tr, interval_s=60.0).tick()
+    spans, metrics = OBS.read_records(path)
+    assert len(spans) == 2 and len(metrics) == 1
+    rows = OBS.waterfall(spans)
+    assert {r[0] for r in rows} == {"client.predict_all",
+                                    "router.fetch"}
+    rc = OBS.main(["report", path])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "complete" in out and "client.predict_all" in out
