@@ -28,6 +28,13 @@
   steady-state candidates/s fell below ``--replicated-min-ratio`` x the
   GIL-convoyed thread-fleet baseline, or if the record ran fewer than 4
   replicas (the tier's win must hold at fleet scale, not just N=2).
+* ``chaos_serve`` — fails if the supervised tier under the scripted
+  fault plan (kill/wedge/drop/delay/dup/corrupt) dropped below
+  ``--chaos-availability`` availability, let any non-degraded reply
+  diverge bit-wise from the fault-free reference, failed to land or
+  recover both process faults within ``--chaos-recovery-s``, never
+  returned to clean parity after the plan drained, or stopped
+  publishing supervisor/router counters to the obs registry.
 * ``obs_overhead`` — fails if the unified telemetry layer (head-sampled
   tracing + metrics-registry export + drift sentinel) costs more than
   ``--obs-min-ratio`` of untraced gateway throughput, if forced-sampling
@@ -244,6 +251,65 @@ def gate_ingest(rec, args) -> int:
     return rc
 
 
+def gate_chaos_serve(rec, args) -> int:
+    """Robustness gate on the supervised tier under scripted chaos:
+    availability across chaos rounds, bounded in-slot recovery, zero
+    bit-level divergence of non-degraded replies from the fault-free
+    reference, the kill+wedge events actually landing, a clean final
+    round after the plan drains, and the supervisor/router counters
+    present in the obs registry snapshot."""
+    r = rec["result"]
+    print(f"chaos_serve: {r['rounds']} rounds, availability "
+          f"{r['availability']:.3f} (gate: >= "
+          f"{args.chaos_availability:.2f}); diverged={r['diverged']} "
+          f"over {r['non_degraded_rounds']} non-degraded rounds "
+          f"(gate: == 0); degraded_rounds={r['degraded_rounds']}; "
+          f"restarts={r['restarts_total']} "
+          f"recovered={r['restarts_recovered']} "
+          f"recovery_s_max={r['recovery_s_max']:.1f}s (gate: <= "
+          f"{args.chaos_recovery_s:.0f}s); "
+          f"faults_applied={r['faults_applied']}; "
+          f"final_clean={r['final_clean']}; "
+          f"obs_counters_present={r['obs_counters_present']}")
+    rc = 0
+    if r["availability"] < args.chaos_availability:
+        print("CHAOS GATE FAILED: availability under fault injection "
+              "fell below the floor", file=sys.stderr)
+        rc = 1
+    if r["diverged"] != 0:
+        print("CHAOS GATE FAILED: a non-degraded reply diverged from "
+              "the fault-free reference (wrong answer under chaos)",
+              file=sys.stderr)
+        rc = 1
+    if not (r["kill_applied"] and r["wedge_applied"]
+            and r["plan_exhausted"]):
+        print("CHAOS GATE FAILED: the fault schedule did not fully "
+              "land (kill/wedge missing or plan not drained) — the "
+              "run proved nothing", file=sys.stderr)
+        rc = 1
+    if r["restarts_recovered"] < 2:
+        print("CHAOS GATE FAILED: the supervisor did not recover both "
+              "the killed and the wedged replica", file=sys.stderr)
+        rc = 1
+    if r["recovery_s_max"] > args.chaos_recovery_s:
+        print("CHAOS GATE FAILED: in-slot respawn exceeded the "
+              "recovery-time bound", file=sys.stderr)
+        rc = 1
+    if not r["final_clean"]:
+        print("CHAOS GATE FAILED: the tier never returned to "
+              "non-degraded bit-parity after the plan drained",
+              file=sys.stderr)
+        rc = 1
+    if not r["obs_counters_present"]:
+        print("CHAOS GATE FAILED: supervisor/router counters are "
+              "missing from the obs registry snapshot",
+              file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print("chaos gate passed")
+    return rc
+
+
 GATES = {
     "kernel_bench": gate_kernel_bench,
     "serve_concurrent": gate_serve_concurrent,
@@ -252,6 +318,7 @@ GATES = {
     "search_fleet_replicated": gate_search_fleet_replicated,
     "ingest": gate_ingest,
     "obs_overhead": gate_obs_overhead,
+    "chaos_serve": gate_chaos_serve,
 }
 
 
@@ -296,6 +363,14 @@ def main() -> int:
                     help="obs_overhead: minimum fraction of sampled "
                          "requests whose span trees reconstruct "
                          "complete (one root, no orphans)")
+    ap.add_argument("--chaos-availability", type=float, default=0.99,
+                    help="chaos_serve: minimum fraction of chaos-loop "
+                         "rounds answered without an exception (the "
+                         "graceful-degradation floor)")
+    ap.add_argument("--chaos-recovery-s", type=float, default=120.0,
+                    help="chaos_serve: maximum seconds for one in-slot "
+                         "respawn to report recovered (spawn + JAX "
+                         "import + warmup on a shared runner)")
     ap.add_argument("--kernel-wall-ratio", type=float, default=1.0,
                     help="kernel_bench: minimum unfused/fused wall-clock "
                          "ratio; only enforced on non-interpret backends "

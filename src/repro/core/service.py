@@ -228,6 +228,11 @@ class CostModelService:
         self.ingest_errors = 0
         self.ingest_tokens = 0
         self.ingest_oov_tokens = 0
+        # predictions served from the analyzer-oracle availability floor
+        # instead of the model (replicated-tier degradation; see
+        # repro.serving.router) — flagged so "the fleet was down and the
+        # static cost model answered" is a counted, observable event
+        self.degraded_preds = 0
         # wall-clock split of the serving hot path, for benchmark
         # attribution (tokenize/encode/hash vs forward)
         self._phase_s = {"hash_s": 0.0, "encode_s": 0.0, "forward_s": 0.0}
@@ -266,6 +271,7 @@ class CostModelService:
             out["full_encodes"] = self.full_encodes
             out["ingested_texts"] = self.ingested_texts
             out["ingest_errors"] = self.ingest_errors
+            out["degraded_preds"] = self.degraded_preds
             out["oov_rate"] = (
                 self.ingest_oov_tokens / self.ingest_tokens
                 if self.ingest_tokens else 0.0)
@@ -444,6 +450,21 @@ class CostModelService:
         to per-target ``DS.denormalize`` (same ops, same dtype path)."""
         den = np.expm1(raw * self._sigma_vec + self._mu_vec)
         return {t: den[:, i] for i, t in enumerate(self.heads)}
+
+    def normalize_rows(self, den: np.ndarray) -> np.ndarray:
+        """(N, n_heads) denormalized values -> normalized rows; exact
+        inverse of :meth:`denormalize_rows` (log1p z-score). Lets
+        out-of-band predictions (the router's analyzer-oracle fallback)
+        ride the same denormalize path as model rows."""
+        den = np.asarray(den, np.float32)
+        sigma = np.where(self._sigma_vec == 0.0, 1.0, self._sigma_vec)
+        return ((np.log1p(den) - self._mu_vec) / sigma).astype(
+            np.float32)
+
+    def note_degraded(self, n: int) -> None:
+        """Count ``n`` analyzer-fallback (degraded) predictions."""
+        with self._cache_lock:
+            self.degraded_preds += int(n)
 
     # ------------------------------------------------------------ inference
     def cache_lookup(self, h: str) -> Optional[np.ndarray]:

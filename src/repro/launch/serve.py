@@ -110,6 +110,29 @@ def main():
                          "VMEM-carry recurrence kernel. Composes with "
                          "--dtype bf16 (bf16 params, f32 in-kernel "
                          "accumulation)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="replicated tier only: run the "
+                         "ReplicaSupervisor (heartbeat liveness, "
+                         "in-slot respawn of crashed/wedged replicas "
+                         "with crash-loop budgets, arrival-rate-driven "
+                         "scale up/down within --max-replicas)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="pre-allocated replica slot ceiling for "
+                         "supervisor scale-up (default: --replicas, "
+                         "i.e. no headroom)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline budget in the router "
+                         "(retries included); a blown deadline sheds "
+                         "or, with --degrade, falls back to the "
+                         "analyzer oracle")
+    ap.add_argument("--degrade", action="store_true",
+                    help="replicated tier only: when the tier is "
+                         "exhausted (all replicas shedding/cooling or "
+                         "the deadline blown), answer from the "
+                         "analyzer-oracle static cost model instead of "
+                         "raising; degraded replies are counted in "
+                         "phase_stats/router stats and the obs "
+                         "registry")
     ap.add_argument("--obs", action="store_true",
                     help="unified telemetry: head-sampled request "
                          "tracing (spans cross the replica wire), one "
@@ -168,7 +191,7 @@ def main():
 
 
 def setup_obs(args, *, server=None, service=None, router=None,
-              shared_cache=None):
+              shared_cache=None, supervisor=None):
     """Build the unified telemetry stack from CLI flags: one tracer,
     one registry over every tier's existing stats source, the drift
     sentinel on the (featurizer) service, and the JSONL exporter that
@@ -179,7 +202,8 @@ def setup_obs(args, *, server=None, service=None, router=None,
     from repro.obs import (JsonlExporter, MetricsRegistry, PromExporter,
                            Tracer, register_drift, register_router,
                            register_server, register_service,
-                           register_shared_cache, register_tracer)
+                           register_shared_cache, register_supervisor,
+                           register_tracer)
     from repro.obs.drift import DriftMonitor, attach
     tracer = Tracer(sample_every=max(1, args.obs_sample))
     reg = MetricsRegistry()
@@ -194,6 +218,8 @@ def setup_obs(args, *, server=None, service=None, router=None,
         register_router(reg, router)
     if shared_cache is not None:
         register_shared_cache(reg, shared_cache)
+    if supervisor is not None:
+        register_supervisor(reg, supervisor)
     register_tracer(reg, tracer)
     exporter = JsonlExporter(args.obs_jsonl, reg, tracer=tracer,
                              interval_s=0.5).start()
@@ -237,8 +263,12 @@ def teardown_obs(args, obs) -> None:
 def run_replicated(svc: CostModelService, args) -> None:
     """Serve the trained model through N replica processes behind the
     struct-key router; the client is duck-typed, so the same closed-loop
-    driver and advisors run unchanged."""
-    from repro.serving import ReplicaClient, ServiceSpec, start_replicas
+    driver and advisors run unchanged. With --supervise the tier is
+    self-healing: a ReplicaSupervisor heartbeats every replica,
+    respawns crashed/wedged ones into their ring slot, and scales the
+    fleet from arrival-rate/health signals."""
+    from repro.serving import (ReplicaClient, ReplicaSupervisor,
+                               ScalePolicy, ServiceSpec, start_replicas)
 
     spec = ServiceSpec.from_service(svc)
     t0 = time.perf_counter()
@@ -247,12 +277,24 @@ def run_replicated(svc: CostModelService, args) -> None:
                           max_batch=args.max_batch,
                           flush_us=args.flush_us,
                           max_queue=args.max_queue,
-                          obs_trace=args.obs)
+                          obs_trace=args.obs,
+                          max_replicas=args.max_replicas)
     obs = None
+    sup = None
     try:
-        client = ReplicaClient(tier.client_handle(0))
+        client = ReplicaClient(
+            tier.client_handle(0),
+            deadline_s=args.deadline_ms / 1e3
+            if args.deadline_ms else None,
+            oracle_fallback=args.degrade)
+        if args.supervise:
+            sup = ReplicaSupervisor(
+                tier,
+                scale=ScalePolicy(min_replicas=1,
+                                  max_replicas=tier.max_replicas),
+                router_stats_fn=client.stats).start()
         obs = setup_obs(args, router=client, service=client.fsvc,
-                        shared_cache=tier.shared_cache)
+                        shared_cache=tier.shared_cache, supervisor=sup)
         if obs:
             client.tracer = obs["tracer"]
         run_session(client, client.fsvc, args, time.perf_counter() - t0)
@@ -268,8 +310,17 @@ def run_replicated(svc: CostModelService, args) -> None:
                   f"shared_hits={payload['shared_hits']}")
         h = client.stats()["health"]
         print(f"  router: sent={[h[r]['sent'] for r in sorted(h)]} "
-              f"shed={client.shed_count}")
+              f"shed={client.shed_count} "
+              f"degraded={client.degraded_count}")
+        if sup is not None:
+            ss = sup.stats()
+            print(f"  supervisor: active={ss['active']} "
+                  f"restarts={ss['restarts_total']} "
+                  f"scale_ups={ss['scale_ups']} "
+                  f"scale_downs={ss['scale_downs']}")
     finally:
+        if sup is not None:
+            sup.stop()
         tier.stop()
         teardown_obs(args, obs)
 

@@ -26,7 +26,7 @@ from repro.obs.export import JsonlExporter, PromExporter, to_prometheus
 from repro.obs.registry import (MetricsRegistry, register_drift,
                                 register_router, register_server,
                                 register_service, register_shared_cache,
-                                register_tracer)
+                                register_supervisor, register_tracer)
 from repro.obs.trace import (Span, TraceContext, TraceRecorder, Tracer,
                              TraceTree, assemble, completeness)
 
@@ -35,5 +35,6 @@ __all__ = [
     "PromExporter", "Span", "TraceContext", "TraceRecorder", "Tracer",
     "TraceTree", "assemble", "completeness", "register_drift",
     "register_router", "register_server", "register_service",
-    "register_shared_cache", "register_tracer", "to_prometheus",
+    "register_shared_cache", "register_supervisor", "register_tracer",
+    "to_prometheus",
 ]

@@ -186,7 +186,22 @@ def register_router(reg: MetricsRegistry, client,
 def register_shared_cache(reg: MetricsRegistry, cache,
                           prefix: str = "shared_cache") -> None:
     reg.add_source(prefix, lambda: {"fill": cache.fill(),
-                                    "n_slots": cache.n_slots})
+                                    "n_slots": cache.n_slots,
+                                    "lock_timeouts": cache.lock_timeouts,
+                                    "torn_drops": cache.torn_drops})
+
+
+def register_supervisor(reg: MetricsRegistry, sup,
+                        prefix: str = "supervisor") -> None:
+    """Adapt a ReplicaSupervisor: restart/recovery counters, crash-loop
+    slots, scale events, heartbeat ages. The restart log itself is
+    narrative (strings), so only its numeric fields survive flattening
+    — the counters are the gated surface."""
+    def _stats():
+        s = sup.stats()
+        s.pop("restart_log", None)     # per-event detail stays in-proc
+        return s
+    reg.add_source(prefix, _stats)
 
 
 def register_drift(reg: MetricsRegistry, monitor,

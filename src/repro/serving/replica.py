@@ -33,25 +33,84 @@ class ReplicaTier:
     """Parent-side handle on the spawned replica fleet.
 
     ``client_handle(i)`` returns the picklable bundle a client (in this
-    or any spawned process) needs to talk to the tier."""
+    or any spawned process) needs to talk to the tier. The tier also
+    retains everything :func:`replica_main` needs (spawn context, server
+    kwargs, the readiness queue) so a dead or wedged replica can be
+    respawned *into the same slot* — same inbox, same ring identity —
+    by :class:`~repro.serving.supervisor.ReplicaSupervisor`."""
 
-    procs: List[mp.Process]
+    procs: List[Optional[mp.Process]]  # slot i <-> ring identity i
     inboxes: List[Any]                 # one request queue per replica
     client_queues: List[Any]           # one response queue per client id
+    #                                    (+ one trailing control queue)
     shared_cache: SharedRowCache
     spec: T.ServiceSpec
+    active: Any = None                 # ctx.Value("i"): routed count
+    ctx: Any = None
+    server_kw: Optional[Dict[str, Any]] = None
+    warmup: bool = True
+    ready: Any = None                  # replicas report ("ready", id)
 
     @property
     def n_replicas(self) -> int:
         return len(self.procs)
 
+    @property
+    def max_replicas(self) -> int:
+        return len(self.inboxes)
+
+    @property
+    def control_queue(self) -> Any:
+        """The supervisor's response queue (reserved trailing slot)."""
+        return self.client_queues[-1]
+
+    @property
+    def control_id(self) -> int:
+        return len(self.client_queues) - 1
+
     def client_handle(self, client_id: int) -> "TierHandle":
         return TierHandle(client_id=client_id, inboxes=self.inboxes,
                           resp_queue=self.client_queues[client_id],
-                          n_replicas=len(self.inboxes), spec=self.spec)
+                          n_replicas=len(self.inboxes), spec=self.spec,
+                          active=self.active)
 
     def alive(self) -> List[bool]:
-        return [p.is_alive() for p in self.procs]
+        return [p is not None and p.is_alive() for p in self.procs]
+
+    def reset_inbox(self, i: int) -> None:
+        """Give slot ``i`` a fresh inbox pipe. A SIGKILLed replica dies
+        holding the queue's reader lock (it waits in ``get()`` with it
+        held) and can leave a half-read frame behind — the successor
+        would wedge on the orphaned semaphore or desync on the torn
+        stream. Replacing the queue sidesteps both: ``inboxes`` is the
+        same list object inside every in-process client handle, so
+        routers pick up the new pipe on their next send, and requests
+        stranded in the old one are re-sent by the client's normal
+        timeout/reroute path. (Clients in *other* processes hold a
+        pickled copy and keep the stale queue: their traffic for this
+        slot reroutes to the survivors, which is degraded but never
+        wrong.)"""
+        ctx = self.ctx or mp.get_context("spawn")
+        self.inboxes[i] = ctx.Queue()
+
+    def spawn(self, i: int) -> mp.Process:
+        """(Re)spawn slot ``i`` from the stored spec; non-blocking (the
+        child reports on :attr:`ready` once rebuilt + warmed). The slot
+        reuses inbox ``i``, so consistent-hash ownership and the other
+        replicas' LRU locality are undisturbed."""
+        if not 0 <= i < len(self.inboxes):
+            raise IndexError(f"replica slot {i} out of range")
+        p = self.ctx.Process(
+            target=replica_main,
+            args=(i, self.spec, self.inboxes[i], self.client_queues,
+                  self.shared_cache, self.server_kw, self.warmup,
+                  self.ready),
+            name=f"costmodel-replica-{i}", daemon=True)
+        p.start()
+        while len(self.procs) <= i:
+            self.procs.append(None)
+        self.procs[i] = p
+        return p
 
     def stop(self, timeout: float = 10.0) -> None:
         for q in self.inboxes:
@@ -59,9 +118,10 @@ class ReplicaTier:
                 q.put((T.MSG_STOP,))
             except Exception:
                 pass
-        for p in self.procs:
+        live = [p for p in self.procs if p is not None]
+        for p in live:
             p.join(timeout=timeout)
-        for p in self.procs:
+        for p in live:
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=5.0)
@@ -84,6 +144,7 @@ class TierHandle:
     resp_queue: Any
     n_replicas: int
     spec: Any = None
+    active: Any = None          # shared routed-replica count (scaling)
 
 
 def start_replicas(spec: T.ServiceSpec, n_replicas: int, *,
@@ -94,36 +155,37 @@ def start_replicas(spec: T.ServiceSpec, n_replicas: int, *,
                    adaptive_flush: bool = True,
                    shared_slots: int = 16384,
                    start_timeout_s: float = 180.0,
-                   obs_trace: bool = False) -> ReplicaTier:
+                   obs_trace: bool = False,
+                   max_replicas: Optional[int] = None) -> ReplicaTier:
     """Spawn ``n_replicas`` model-serving processes + the shared cache.
 
     Blocks until every replica reports ready (model rebuilt, programs
     warmed), so the first real request never pays child-process startup.
-    ``n_clients`` response queues are created up front; client ids are
-    assigned by the caller via :meth:`ReplicaTier.client_handle`."""
+    ``n_clients`` response queues are created up front (plus one
+    trailing control queue reserved for the supervisor's heartbeat RPC);
+    client ids are assigned by the caller via
+    :meth:`ReplicaTier.client_handle`. ``max_replicas`` pre-allocates
+    extra inbox slots so the supervisor can scale the tier up later
+    without re-plumbing existing clients."""
     ctx = mp.get_context("spawn")
+    max_replicas = max(n_replicas, max_replicas or n_replicas)
     n_heads = len(spec.norm_stats) if isinstance(spec.norm_stats, dict) \
         and all(isinstance(v, dict) for v in spec.norm_stats.values()) \
         else 1
     shared = SharedRowCache(n_heads, n_slots=shared_slots, ctx=ctx)
-    inboxes = [ctx.Queue() for _ in range(n_replicas)]
-    client_queues = [ctx.Queue() for _ in range(n_clients)]
+    inboxes = [ctx.Queue() for _ in range(max_replicas)]
+    client_queues = [ctx.Queue() for _ in range(n_clients + 1)]
     ready = ctx.Queue()
     server_kw = dict(max_batch=max_batch, flush_us=flush_us,
                      max_queue=max_queue, adaptive_flush=adaptive_flush,
                      obs_trace=obs_trace)
-    procs = []
-    for i in range(n_replicas):
-        p = ctx.Process(
-            target=replica_main,
-            args=(i, spec, inboxes[i], client_queues, shared,
-                  server_kw, warmup, ready),
-            name=f"costmodel-replica-{i}", daemon=True)
-        p.start()
-        procs.append(p)
-    tier = ReplicaTier(procs=procs, inboxes=inboxes,
+    tier = ReplicaTier(procs=[], inboxes=inboxes,
                        client_queues=client_queues, shared_cache=shared,
-                       spec=spec)
+                       spec=spec, active=ctx.Value("i", n_replicas),
+                       ctx=ctx, server_kw=server_kw, warmup=warmup,
+                       ready=ready)
+    for i in range(n_replicas):
+        tier.spawn(i)
     for _ in range(n_replicas):
         try:
             msg = ready.get(timeout=start_timeout_s)
@@ -292,7 +354,9 @@ def replica_main(replica_id: int, spec: T.ServiceSpec, inbox,
                        "server": m,
                        "cache": svc.cache_stats(),
                        "shared_hits": shared_hits,
-                       "shared_misses": shared_misses}
+                       "shared_misses": shared_misses,
+                       "shared_lock_timeouts": shared.lock_timeouts,
+                       "shared_torn_drops": shared.torn_drops}
             if tracer is not None:
                 payload["obs"] = {
                     "spans_buffered": len(tracer.recorder),

@@ -15,12 +15,21 @@ but fans misses out across N replica processes:
   for a graph family land on the replica whose LRU already holds them.
   The ring's successor order doubles as the reroute fallback chain.
 * **Retry / backoff / shed.** Overload replies carry the replica's own
-  ``retry_after_s`` hint; the client backs off (exponential, seeded by
-  the hint), reroutes around replicas in cooldown or timing out, and
-  sheds with :class:`~repro.core.server.ServerOverloadedError` once
+  ``retry_after_s`` hint; the client backs off with *decorrelated
+  jitter* (so N fleet workers retrying the same recovering replica
+  don't thundering-herd it in lockstep), reroutes around replicas in
+  cooldown or timing out, and sheds with
+  :class:`~repro.core.server.ServerOverloadedError` once
   ``max_retries`` rounds exhaust. Per-replica health counters
   (sent/ok/overload/err/timeout/reroutes, consecutive failures,
   cooldown window) feed both routing and ``stats()``.
+* **Deadline budgets + oracle floor.** ``deadline_s`` bounds a whole
+  fetch (retries included). With ``oracle_fallback=True`` a blown
+  deadline or exhausted tier degrades to the analyzer oracle — the
+  paper's static cost model — instead of raising, so beam search keeps
+  making progress through a dying fleet. Degraded predictions are
+  counted here (``degraded_count``), flagged in the featurizer's
+  ``phase_stats()``, and never cached.
 
 The transport is pluggable (anything with ``n_replicas`` / ``send`` /
 ``recv``), so tests can drive the full retry state machine without
@@ -29,7 +38,9 @@ spawning processes.
 from __future__ import annotations
 
 import hashlib
+import os
 import queue
+import random
 import threading
 import time
 from bisect import bisect_right
@@ -157,7 +168,11 @@ class ReplicaClient:
                  *, transport=None, local_cache: bool = True,
                  vnodes: int = 32, max_retries: int = 4,
                  backoff_s: float = 0.005, backoff_mult: float = 2.0,
+                 backoff_cap_s: Optional[float] = None,
                  timeout_s: float = 60.0, cooldown_s: float = 0.05,
+                 deadline_s: Optional[float] = None,
+                 oracle_fallback: bool = False,
+                 jitter_seed: Optional[int] = None,
                  tracer=None):
         if transport is None:
             transport = QueueTransport(handle)
@@ -167,13 +182,35 @@ class ReplicaClient:
         # back on MSG_RES, so one client recorder holds complete trees
         self.tracer = tracer
         self.client_id = getattr(transport, "client_id", 0)
-        self.ring = HashRing(transport.n_replicas, vnodes=vnodes)
+        self.vnodes = vnodes
+        # scaling: the supervisor publishes the routed replica count in
+        # a shared Value; the ring tracks it lazily (see _maybe_resize)
+        self._active = getattr(handle, "active", None)
+        if self._active is None:
+            self._active = getattr(transport, "active", None)
+        n_active = self._active.value if self._active is not None \
+            else transport.n_replicas
+        self.ring = HashRing(n_active, vnodes=vnodes)
         self.local_cache = local_cache
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.backoff_mult = backoff_mult
+        # decorrelated jitter: sleep ~ U(base, 3*prev) capped; the cap
+        # defaults to where the old exponential schedule would have
+        # topped out, keeping worst-case retry latency unchanged
+        self.backoff_cap_s = backoff_cap_s if backoff_cap_s is not None \
+            else backoff_s * (backoff_mult ** max_retries)
+        seed = jitter_seed if jitter_seed is not None else (
+            (os.getpid() << 20) ^ getattr(transport, "client_id", 0)
+            ^ int(time.monotonic_ns() & 0xFFFFF))
+        self._jitter = random.Random(seed)
         self.timeout_s = timeout_s
         self.cooldown_s = cooldown_s
+        self.deadline_s = deadline_s
+        self.oracle_fallback = oracle_fallback
+        self.degraded_count = 0         # analyzer-fallback predictions
+        self.deadline_expired = 0       # fetches cut short by the budget
+        self.recv_errors = 0            # torn replies read as timeouts
         # The featurizer: same recipe as the replicas, used ONLY for
         # struct keys / token ids / (optionally) the local row LRU.
         if spec is None:
@@ -236,10 +273,26 @@ class ReplicaClient:
                 tr.end(feat, n_miss=len(miss_graphs),
                        local_hits=len(vals))
             if entries:
-                fetched = self._fetch(entries, trace=sub)
+                if self.oracle_fallback:
+                    fetched, left = self._fetch_rounds(entries, trace=sub)
+                else:
+                    fetched, left = self._fetch(entries, trace=sub), {}
                 vals.update(fetched)
-                if self.local_cache:
+                if self.local_cache and fetched:
                     self.fsvc.import_cache(list(fetched.items()))
+                if left:
+                    # tier exhausted / deadline blown: the analyzer
+                    # oracle is the availability floor. Degraded rows
+                    # are flagged (counters here + featurizer
+                    # phase_stats) and NEVER cached, so real serving
+                    # takes back over the moment the tier recovers.
+                    vals.update(self._oracle_rows(
+                        {k: miss_graphs[k] for k in left}))
+                    self.degraded_count += len(left)
+                    self.fsvc.note_degraded(len(left))
+                    if tr is not None:
+                        tr.error_span("router.degraded", sub,
+                                      n_degraded=len(left))
         except BaseException:
             if tr is not None:
                 tr.end(root, status="err")
@@ -303,38 +356,99 @@ class ReplicaClient:
                 return r
         return order[0]
 
+    def _maybe_resize(self) -> None:
+        """Track the supervisor-published routed replica count. Cheap
+        (one shared-int read); the ring is rebuilt only on change, and
+        slot identities are stable so surviving replicas keep their key
+        ownership."""
+        if self._active is None:
+            return
+        n = self._active.value
+        if n != self.ring.n_replicas and n >= 1:
+            self.ring = HashRing(n, vnodes=self.vnodes)
+
     def _fetch(self, entries: Sequence[Tuple[str, np.ndarray]],
                trace=None) -> Dict[str, np.ndarray]:
         """Resolve (key, ids) misses through the tier, with retry,
         reroute-on-failure, backoff, and final shed."""
+        got, pending = self._fetch_rounds(entries, trace=trace)
+        if pending:
+            raise ServerOverloadedError(
+                f"{len(pending)} request(s) shed after "
+                f"{self.max_retries + 1} attempts across "
+                f"{self.ring.n_replicas} replicas")
+        return got
+
+    def _fetch_rounds(self, entries: Sequence[Tuple[str, np.ndarray]],
+                      trace=None) -> Tuple[Dict[str, np.ndarray],
+                                           Dict[str, np.ndarray]]:
+        """Retry/backoff core: returns ``(got, still_pending)``; the
+        caller decides whether leftovers raise (``_fetch``) or degrade
+        to the oracle (``predict_all``)."""
         tr = self.tracer
         span = tr.start("router.fetch", trace,
                         tags={"n_entries": len(entries)}) if tr else None
         sub = span.ctx if span is not None else None
+        self._maybe_resize()
         pending: Dict[str, np.ndarray] = dict(entries)
         got: Dict[str, np.ndarray] = {}
-        delay = self.backoff_s
+        deadline = time.monotonic() + self.deadline_s \
+            if self.deadline_s is not None else None
+        sleep = self.backoff_s
+        attempt = 0
         for attempt in range(self.max_retries + 1):
             if not pending:
                 break
-            hint = self._round(pending, got, trace=sub)
+            if deadline is not None and time.monotonic() >= deadline:
+                self.deadline_expired += 1
+                break
+            hint = self._round(pending, got, trace=sub,
+                               deadline=deadline)
             if pending and attempt < self.max_retries:
-                time.sleep(max(hint, delay))
-                delay *= self.backoff_mult
+                # decorrelated jitter (not plain exponential): each
+                # client walks its own randomized schedule, so a fleet
+                # of workers retrying a recovering replica spreads out
+                # instead of re-converging every backoff_mult^k ticks
+                sleep = min(self.backoff_cap_s,
+                            self._jitter.uniform(self.backoff_s,
+                                                 max(sleep * 3.0,
+                                                     self.backoff_s)))
+                wait = max(hint, sleep)
+                if deadline is not None:
+                    wait = min(wait, max(deadline - time.monotonic(),
+                                         0.0))
+                time.sleep(wait)
         if pending:
             self.shed_count += 1
             if tr is not None:          # sheds are always-on telemetry
                 tr.error_span("router.shed", sub,
                               n_pending=len(pending),
-                              attempts=self.max_retries + 1)
+                              attempts=attempt + 1)
                 tr.end(span, status="shed", attempts=attempt + 1)
-            raise ServerOverloadedError(
-                f"{len(pending)} request(s) shed after "
-                f"{self.max_retries + 1} attempts across "
-                f"{self.ring.n_replicas} replicas")
-        if tr is not None:
+        elif tr is not None:
             tr.end(span, attempts=attempt + 1)
-        return got
+        return got, pending
+
+    def _oracle_rows(self, graphs_by_key: Dict[str, Any]
+                     ) -> Dict[str, np.ndarray]:
+        """Analyzer-oracle fallback rows (normalized space, so they ride
+        the same denormalize path as model rows). Heads the static
+        analyzers don't model fall back to the training mean
+        (normalized 0)."""
+        from repro.ir.analyzers import TARGETS
+        heads = list(self.heads)
+        out: Dict[str, np.ndarray] = {}
+        for key, g in graphs_by_key.items():
+            den = np.zeros((1, len(heads)), np.float32)
+            known = np.zeros(len(heads), bool)
+            for i, t in enumerate(heads):
+                fn = TARGETS.get(t)
+                if fn is not None:
+                    den[0, i] = float(fn(g))
+                    known[i] = True
+            raw = self.fsvc.normalize_rows(den)[0]
+            out[key] = np.where(known, raw, 0.0).astype(np.float32)
+        return out
 
     def _recv_any(self, bids, deadline: float):
         """Next reply addressed to one of ``bids`` (all registered in
@@ -362,6 +476,12 @@ class ReplicaClient:
                 msg = self.transport.recv(
                     max(deadline - time.monotonic(), 1e-3))
             except queue.Empty:
+                msg = None
+            except Exception:
+                # a replica dying mid-reply can tear the response
+                # stream; a torn message reads as a timeout (and a
+                # retry), never a crashed fetch
+                self.recv_errors += 1
                 msg = None
             finally:
                 with self._cond:
@@ -392,7 +512,8 @@ class ReplicaClient:
                 self._mail.pop(bid, None)
 
     def _round(self, pending: Dict[str, np.ndarray],
-               got: Dict[str, np.ndarray], trace=None) -> float:
+               got: Dict[str, np.ndarray], trace=None,
+               deadline: Optional[float] = None) -> float:
         """One routed send/collect round. Resolved keys move from
         ``pending`` to ``got``; returns the max retry_after hint.
 
@@ -408,6 +529,7 @@ class ReplicaClient:
             groups.setdefault(self._pick_replica(key, now), []).append(
                 (key, ids))
         outstanding: Dict[int, Tuple[int, List[str], Any]] = {}
+        tracked: set = set()
         for replica, ents in groups.items():
             bid = self._next_batch_id()
             ks, lens_b, ids_b = T.pack_entries(ents)
@@ -417,19 +539,28 @@ class ReplicaClient:
             msg = (T.MSG_REQ, self.client_id, bid, ks, lens_b, ids_b)
             if sp is not None:
                 msg = msg + (sp.ctx.to_wire(),)
+            # register the bid BEFORE the send: with a shared client,
+            # another thread can pull our reply off the queue the
+            # instant the send lands, and an untracked bid reads as
+            # stale and gets dropped (a spurious 1-round timeout)
+            self._track({bid})
+            tracked.add(bid)
             try:
                 self.transport.send(replica, msg)
                 self.health[replica].sent += 1
                 outstanding[bid] = (replica, ks, sp)
             except Exception:
+                self._untrack({bid})
+                tracked.discard(bid)
                 self.health[replica].note_failure(
                     "err", self.cooldown_s)
                 if tr is not None:
                     tr.end(sp, status="err", stage="send")
         hint = 0.0
-        deadline = time.monotonic() + self.timeout_s
-        tracked = set(outstanding)
-        self._track(tracked)
+        round_deadline = time.monotonic() + self.timeout_s
+        if deadline is not None:        # per-request budget clamps the
+            round_deadline = min(round_deadline, deadline)   # wait too
+        deadline = round_deadline
         try:
             while outstanding:
                 msg = self._recv_any(set(outstanding), deadline)
@@ -486,15 +617,16 @@ class ReplicaClient:
         for r in range(self.ring.n_replicas):
             rid = self._next_batch_id()
             rids[rid] = r
+            self._track({rid})          # before the send (demux race)
             try:
                 self.transport.send(r, (tag, self.client_id, rid))
             except Exception:
+                self._untrack({rid})
                 del rids[rid]
         out: List[Optional[Dict[str, Any]]] = \
             [None] * self.ring.n_replicas
         deadline = time.monotonic() + timeout_s
         tracked = set(rids)
-        self._track(tracked)
         try:
             want = len(rids)
             while want:
@@ -526,6 +658,9 @@ class ReplicaClient:
             "client_id": self.client_id,
             "n_replicas": self.ring.n_replicas,
             "shed_count": self.shed_count,
+            "degraded_count": self.degraded_count,
+            "deadline_expired": self.deadline_expired,
+            "recv_errors": self.recv_errors,
             "local_cache": self.fsvc.cache_stats(),
             "health": {r: h.as_dict()
                        for r, h in enumerate(self.health)},

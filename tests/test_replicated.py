@@ -4,7 +4,9 @@ keeps per-replica LRUs hot, the shared cross-replica cache tier, the
 wire format, and the client's retry/backoff/health/shed state machine
 (driven through a fake transport, no processes needed)."""
 import hashlib
+import os
 import queue
+import signal
 import threading
 import time
 
@@ -492,3 +494,80 @@ def test_router_scripted_error_counts_and_reroutes(fake_client):
     st = client.stats()
     assert st["health"][bad]["err"] == 1
     assert st["shed_count"] == 0
+
+
+# --------------------------------------------- hard failure (real tier)
+def test_replica_sigkill_mid_load_recovers(corpus, service, spec):
+    """SIGKILL a replica while a client is driving load: in-flight and
+    subsequent requests reroute to the survivor (zero exceptions, zero
+    wrong predictions), the supervisor respawns the dead slot, and ring
+    ownership lands back on the respawned replica."""
+    from repro.serving import ReplicaSupervisor
+    graphs, _ = corpus
+    want = service.predict_all(graphs)
+    tier2 = start_replicas(spec, 2, n_clients=1, flush_us=300.0,
+                           start_timeout_s=240.0)
+    sup = None
+    try:
+        # death detection is exitcode-driven; the huge heartbeat
+        # timeout keeps wedge detection out of this test's way
+        sup = ReplicaSupervisor(tier2, heartbeat_s=0.25,
+                                heartbeat_timeout_s=60.0,
+                                restart_backoff_s=0.05,
+                                start_timeout_s=240.0).start()
+        client = ReplicaClient(tier2.client_handle(0),
+                               local_cache=False, timeout_s=2.0,
+                               cooldown_s=0.05)
+        results, errs = [], []
+        stop = threading.Event()
+
+        def load():
+            while not stop.is_set():
+                try:
+                    results.append(client.predict_all(graphs))
+                except Exception as e:    # pragma: no cover - regression
+                    errs.append(e)
+                    return
+
+        t = threading.Thread(target=load)
+        t.start()
+        time.sleep(0.5)                    # mid-load
+        os.kill(tier2.procs[0].pid, signal.SIGKILL)
+        deadline = time.monotonic() + 240.0
+        while time.monotonic() < deadline:
+            st = sup.stats()
+            if st["restarts_recovered"] >= 1 and not st["respawning"]:
+                break
+            time.sleep(0.25)
+        stop.set()
+        t.join(timeout=120.0)
+        assert not t.is_alive()
+        assert not errs                    # rerouting absorbed the death
+        assert results
+        for r in results:                  # zero wrong predictions
+            for tgt in want:
+                np.testing.assert_allclose(r[tgt], want[tgt], rtol=1e-6)
+        # the client actually saw (and rode out) the failure
+        assert client.health[0].timeout + client.health[0].reroutes >= 1
+        st = sup.stats()
+        assert st["restarts_total"] >= 1
+        assert st["restarts_recovered"] >= 1
+        assert any(rec["replica"] == 0 and rec["reason"] == "died"
+                   for rec in st["restart_log"])
+        assert all(tier2.alive())
+        # ownership restored: slot 0 serves its keys again once its
+        # routing cooldown (escalated during the outage, possibly
+        # refreshed by the load thread's final timeout) drains
+        before = client.health[0].ok
+        deadline = time.monotonic() + 30.0
+        while client.health[0].ok == before and \
+                time.monotonic() < deadline:
+            time.sleep(0.5)
+            client.predict_all(graphs)
+        assert client.health[0].ok > before
+        payloads = [p for p in client.replica_stats() if p]
+        assert {p["replica_id"] for p in payloads} == {0, 1}
+    finally:
+        if sup is not None:
+            sup.stop()
+        tier2.stop()
